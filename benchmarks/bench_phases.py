@@ -1,0 +1,40 @@
+"""Paper Fig. 10 analogue: initialization vs traversal phase timing.
+
+Phase 1 (init): static layout + memory-bound planning + head/tail plan —
+everything the paper's `initialization phase` does (data-structure prep,
+light scans).  Phase 2 (traversal): the masked-frontier DAG traversal +
+global reduce."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (flatten, compress_files, plan_local_tables,
+                        top_down_weights, word_count)
+from repro.core.sequence import plan_head_tail, plan_stream, resolve_head_tail
+from .common import emit, get_corpus, timeit
+
+
+def run(datasets=("A", "B", "D", "R")) -> None:
+    for ds in datasets:
+        files, cc = get_corpus(ds)
+        ga = cc.ga
+
+        def phase1():
+            plan_local_tables(ga)
+            htp = plan_head_tail(ga, 3)
+            plan_stream(ga, 3)
+            resolve_head_tail(ga, htp)
+
+        def phase2():
+            np.asarray(word_count(ga))
+
+        t1 = timeit(phase1)
+        t2 = timeit(phase2)
+        emit(f"fig10/{ds}/phase1_init", t1, f"rules={ga.num_rules}")
+        emit(f"fig10/{ds}/phase2_traversal", t2,
+             f"depth={ga.num_levels}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Data-plane benchmark: random-access window expansion throughput
+(tokens/s out of the compressed store) and batch pipeline rate — the
+training-feed path (paper [3]'s random access claim, system-level)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data import BatchPipeline
+from .common import emit, get_corpus, timeit
+
+
+def run(datasets=("B", "R")) -> None:
+    for ds in datasets:
+        files, cc = get_corpus(ds)
+        seq = 128
+        bsz = 16
+
+        def expand():
+            rng = np.random.default_rng(0)
+            tot = 0
+            for _ in range(32):
+                f = int(rng.integers(len(cc.file_lens)))
+                off = int(rng.integers(max(int(cc.file_lens[f]) - seq, 1)))
+                tot += len(cc.window(f, off, seq))
+            return tot
+
+        t = timeit(expand)
+        emit(f"pipeline/{ds}/window_expand", t,
+             f"tokens_per_s={32 * seq / t:.0f}")
+
+        pl = BatchPipeline(cc, global_batch=bsz, seq_len=seq, seed=0,
+                           prefetch=0)
+        t = timeit(lambda: pl.batch_at(3))
+        emit(f"pipeline/{ds}/batch", t,
+             f"tokens_per_s={bsz * seq / t:.0f}")
+
+
+if __name__ == "__main__":
+    run()

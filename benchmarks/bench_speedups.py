@@ -1,0 +1,109 @@
+"""Paper Fig. 9 analogue: the six analytics, TADOC engine vs direct.
+
+"tadoc"  — this repo's compressed-domain analytics (grammar traversal).
+"direct" — the same analytics over the *uncompressed* token stream through
+           the same JAX stack (paper §VI-E compares G-TADOC against
+           GPU-accelerated uncompressed analytics — same device both sides;
+           here both sides run CPU-JAX).
+
+Derived columns report the **reuse bound** = corpus tokens / grammar
+symbols: the algorithmic ceiling on TADOC's win (repeated content is
+touched once).  On this CPU container with scaled-down corpora, fixed JAX
+dispatch overhead (~ms) dominates sub-ms kernels, so wall-clock speedups
+materialize only on the high-redundancy corpus (R); the paper's regime
+(GB-scale web dumps, ratios 5-13x, GPU) sits far to the right of these
+sizes.  EXPERIMENTS.md §Benchmarks discusses the scaling."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (word_count, sort_words, term_vector, inverted_index,
+                        ranked_inverted_index, sequence_count)
+from .common import emit, get_corpus, timeit
+
+
+# ---- direct (uncompressed) analytics, same JAX stack -------------------- #
+import functools
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def _d_word_count(stream, file_ids, vocab, nfiles):
+    del file_ids, nfiles
+    return jax.ops.segment_sum(jnp.ones_like(stream, jnp.float32), stream,
+                               num_segments=vocab)
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def _d_term_vector(stream, file_ids, vocab, nfiles):
+    idx = file_ids * vocab + stream
+    flat = jax.ops.segment_sum(jnp.ones_like(stream, jnp.float32), idx,
+                               num_segments=nfiles * vocab)
+    return flat.reshape(nfiles, vocab)
+
+
+def _d_ngrams(stream, file_ids, l=3):
+    # windows not crossing file boundaries; sort + segment count
+    win = jnp.stack([stream[i:stream.shape[0] - l + 1 + i]
+                     for i in range(l)], axis=1)
+    same = file_ids[:-l + 1] == file_ids[l - 1:]
+    order = jnp.lexsort(tuple(win[:, c] for c in range(l - 1, -1, -1)))
+    sw = win[order]
+    valid = same[order].astype(jnp.float32)
+    newseg = jnp.concatenate([jnp.array([True]),
+                              (sw[1:] != sw[:-1]).any(axis=1)])
+    seg = jnp.cumsum(newseg) - 1
+    counts = jax.ops.segment_sum(valid, seg, num_segments=sw.shape[0])
+    return sw, counts
+
+
+def run(datasets=("A", "B", "D", "R")) -> None:
+    for ds in datasets:
+        files, cc = get_corpus(ds)
+        ga = cc.ga
+        V = ga.vocab_size
+        stream = jnp.asarray(np.concatenate(files))
+        file_ids = jnp.asarray(np.concatenate(
+            [np.full(len(f), i) for i, f in enumerate(files)]))
+        nf = len(files)
+        tokens = int(stream.shape[0])
+        reuse = tokens / ga.body.shape[0]
+
+        apps = {
+            "word_count": (
+                lambda: np.asarray(word_count(ga)),
+                lambda: np.asarray(_d_word_count(stream, file_ids, V, nf))),
+            "sort": (
+                lambda: np.asarray(sort_words(ga)[1]),
+                lambda: np.asarray(jnp.sort(
+                    _d_word_count(stream, file_ids, V, nf))[::-1])),
+            "term_vector": (
+                lambda: np.asarray(term_vector(ga)),
+                lambda: np.asarray(_d_term_vector(stream, file_ids, V, nf))),
+            "inverted_index": (
+                lambda: np.asarray(inverted_index(ga)),
+                lambda: np.asarray(
+                    _d_term_vector(stream, file_ids, V, nf) > 0)),
+            "ranked_inverted_index": (
+                lambda: np.asarray(ranked_inverted_index(ga)[0]),
+                lambda: np.asarray(jnp.argsort(
+                    -_d_term_vector(stream, file_ids, V, nf), axis=0))),
+            "sequence_count": (
+                lambda: sequence_count(ga, l=3),
+                lambda: jax.block_until_ready(
+                    _d_ngrams(stream, file_ids, 3))),
+        }
+        for app, (tadoc_fn, direct_fn) in apps.items():
+            t_t = timeit(tadoc_fn)
+            t_d = timeit(direct_fn)
+            emit(f"fig9/{ds}/{app}/tadoc", t_t,
+                 f"ratio={ga.compression_ratio():.1f}x;"
+                 f"reuse_bound={reuse:.1f}x")
+            emit(f"fig9/{ds}/{app}/direct", t_d,
+                 f"speedup_tadoc_vs_direct={t_d / t_t:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

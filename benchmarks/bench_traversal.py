@@ -1,0 +1,40 @@
+"""Paper §VI-C analogue: top-down vs bottom-up + engine variants.
+
+* term_vector via batched per-file top-down vs bottom-up local tables
+  (the dataset A vs B story: many files favour bottom-up, few favour
+  top-down) + what the selector picked.
+* word_count across the three engines: paper-faithful masked frontier,
+  beyond-paper leveled schedule, Pallas-ELL frontier.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (bottom_up_tables, per_file_weights, select_direction,
+                        top_down_weights, word_count)
+from .common import emit, get_corpus, timeit
+
+
+def run(datasets=("A", "B", "D", "R")) -> None:
+    for ds in datasets:
+        files, cc = get_corpus(ds)
+        ga = cc.ga
+
+        t_td = timeit(lambda: np.asarray(per_file_weights(ga, "frontier")))
+        t_bu = timeit(lambda: np.asarray(bottom_up_tables(ga)[0]))
+        pick = select_direction(ga)
+        emit(f"vi_c/{ds}/term_vector/top_down", t_td,
+             f"files={ga.num_files}")
+        emit(f"vi_c/{ds}/term_vector/bottom_up", t_bu,
+             f"selector={pick};correct="
+             f"{(pick == 'top_down') == (t_td <= t_bu)}")
+
+        for method in ("frontier", "leveled", "frontier_ell"):
+            t = timeit(lambda m=method: np.asarray(top_down_weights(ga, m)))
+            emit(f"vi_c/{ds}/weights/{method}", t,
+                 f"depth={ga.num_levels}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Shared benchmark utilities: timing, corpora, CSV emission."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from repro.data import CompressedCorpus, synthetic
+
+ROWS: List[str] = []
+
+
+def timeit(fn: Callable, repeat: int = 3, warmup: int = 1) -> float:
+    """Median wall-time in seconds."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    us = seconds * 1e6
+    row = f"{name},{us:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+_CORPora: Dict[str, tuple] = {}
+
+
+def get_corpus(name: str):
+    """(files, CompressedCorpus) for a Table-II-analogue dataset.
+
+    "R" is an extra high-redundancy corpus (compression ratio ~10-20x) that
+    exposes TADOC's computation-reuse scaling — the paper's datasets are
+    web/text dumps with much higher redundancy than small synthetic data.
+    """
+    if name in _CORPora:
+        return _CORPora[name]
+    if name == "R":
+        rng = np.random.default_rng(9)
+        base = rng.integers(0, 800, 2_000)
+        files = [np.concatenate([base] * 10 + [rng.integers(0, 800, 500)])
+                 for _ in range(4)]
+        vocab = 800
+    else:
+        spec = synthetic.TABLE2[name]
+        files = synthetic.make_table2_corpus(name)
+        vocab = spec.vocab
+    cc = CompressedCorpus.build(files, vocab_size=vocab)
+    _CORPora[name] = (files, cc)
+    return files, cc

@@ -1,0 +1,42 @@
+"""Benchmark entry point: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  fig9/*     — Fig. 9 analogue: six analytics, TADOC vs direct
+  fig10/*    — Fig. 10 analogue: init vs traversal phase split
+  vi_c/*     — §VI-C analogue: top-down vs bottom-up + engine variants
+  pipeline/* — compressed-store batch feed throughput
+  roofline/* — summary rows from the dry-run roofline table (if present)
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    datasets = ("D", "R") if quick else ("A", "B", "D", "R")
+
+    from . import bench_speedups, bench_phases, bench_traversal, \
+        bench_pipeline
+    bench_speedups.run(datasets)
+    bench_phases.run(datasets)
+    bench_traversal.run(datasets)
+    bench_pipeline.run(("D", "R") if quick else ("B", "R"))
+
+    # roofline summary (reads dry-run artifacts if the sweep has run)
+    try:
+        from repro.launch import roofline
+        rows = roofline.load_all()
+        for r in rows:
+            if "skipped" in r:
+                continue
+            print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},"
+                  f"{r['bound_s'] * 1e6:.1f},"
+                  f"dominant={r['dominant']};frac={r['roofline_frac']:.3f}")
+    except Exception as e:  # sweep not run yet
+        print(f"roofline/unavailable,0,{e!r}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Run all six analytics over the Table-II-analogue datasets, with the
+traversal-strategy selector's decision per dataset (paper §VI-C).
+
+    PYTHONPATH=src python examples/analytics_suite.py
+"""
+
+import time
+
+import numpy as np
+
+from repro.core import (inverted_index, ranked_inverted_index, select_direction,
+                        sequence_count, sort_words, term_vector, word_count)
+from repro.data import CompressedCorpus, synthetic
+
+
+def main() -> None:
+    for name in ("A", "B", "C", "D", "E"):
+        spec = synthetic.TABLE2[name]
+        files = synthetic.make_table2_corpus(name)
+        cc = CompressedCorpus.build(files, vocab_size=spec.vocab)
+        ga = cc.ga
+        s = cc.stats()
+        print(f"\n=== dataset {name}: {s['tokens']} tokens, "
+              f"{s['files']} files, {s['rules']} rules, "
+              f"ratio {s['compression_ratio']:.2f}x, depth {s['dag_depth']} "
+              f"-> selector: {select_direction(ga)}")
+        for app, fn in [
+            ("word_count", lambda: np.asarray(word_count(ga))),
+            ("sort", lambda: np.asarray(sort_words(ga)[1])),
+            ("term_vector", lambda: np.asarray(term_vector(ga))),
+            ("inverted_index", lambda: np.asarray(inverted_index(ga))),
+            ("ranked_inverted_index",
+             lambda: np.asarray(ranked_inverted_index(ga)[0])),
+            ("sequence_count", lambda: sequence_count(ga, l=3)),
+        ]:
+            t0 = time.perf_counter()
+            out = fn()
+            dt = time.perf_counter() - t0
+            extra = ""
+            if app == "word_count":
+                extra = f" (total {int(out.sum())})"
+            if app == "sequence_count":
+                extra = f" ({len(out[1])} distinct 3-grams)"
+            print(f"  {app:24s} {dt*1e3:8.1f} ms{extra}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Batched serving demo: KV-cache decode over a batch of requests.
+
+    PYTHONPATH=src python examples/serve_batched.py --batch 8 --steps 24
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_cache, init_lm, reduced, unbox
+from repro.serving import make_serve_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-9b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--steps", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch), dtype="float32")
+    params, _ = unbox(init_lm(jax.random.PRNGKey(0), cfg))
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(
+        0, cfg.vocab_size, (args.batch, args.prompt_len)).astype(np.int32))
+
+    max_len = args.prompt_len + args.steps
+    cache = init_cache(cfg, args.batch, max_len)
+    step = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+
+    # prefill (token-by-token at demo scale), then timed decode
+    tok = None
+    for t in range(args.prompt_len):
+        tok, cache, _ = step(params, cache, prompts[:, t:t + 1])
+    jax.block_until_ready(tok)
+    t0 = time.perf_counter()
+    outs = []
+    for _ in range(args.steps):
+        outs.append(tok)
+        tok, cache, _ = step(params, cache, tok)
+    jax.block_until_ready(tok)
+    dt = time.perf_counter() - t0
+    tput = args.batch * args.steps / dt
+    print(f"{args.arch} (reduced): batch={args.batch} "
+          f"decode {args.steps} steps in {dt*1e3:.0f} ms "
+          f"-> {tput:.0f} tok/s")
+    print("sampled ids (first request):",
+          [int(o[0, 0]) for o in outs][:12])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Checkpointing: sharded npz + manifest, atomic publish, restart/elastic."""
+
+from .ckpt import save_checkpoint, restore_checkpoint, latest_step, CheckpointManager
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "CheckpointManager"]

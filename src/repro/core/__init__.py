@@ -1,0 +1,31 @@
+"""TADOC core: the paper's contribution — text analytics directly on
+Sequitur-compressed data, as composable JAX modules.
+
+Pipeline: ``sequitur.compress_files`` (offline, host) ->
+``grammar.flatten`` (static layout) -> ``traversal`` / ``analytics`` /
+``sequence`` (JAX, TPU-targeted) with ``memory`` planning the static arenas
+and ``selector`` choosing the traversal strategy.
+"""
+
+from .sequitur import Grammar, compress, compress_files
+from .grammar import GrammarArrays, flatten, expand_range
+from .traversal import (top_down_weights, per_file_weights, bottom_up_tables,
+                        bottom_up_bounds, traversal_rounds)
+from .analytics import (word_count, sort_words, inverted_index, term_vector,
+                        ranked_inverted_index, sequence_count,
+                        term_vector_sparse)
+from .selector import select_direction, estimate_costs
+from .memory import (ArenaPlan, plan_local_tables, plan_streams,
+                     head_tail_upper_limit, stream_upper_limit)
+
+__all__ = [
+    "Grammar", "compress", "compress_files",
+    "GrammarArrays", "flatten", "expand_range",
+    "top_down_weights", "per_file_weights", "bottom_up_tables",
+    "bottom_up_bounds", "traversal_rounds",
+    "word_count", "sort_words", "inverted_index", "term_vector",
+    "ranked_inverted_index", "sequence_count", "term_vector_sparse",
+    "select_direction", "estimate_costs",
+    "ArenaPlan", "plan_local_tables", "plan_streams",
+    "head_tail_upper_limit", "stream_upper_limit",
+]

@@ -1,0 +1,143 @@
+"""The six TADOC analytics applications (paper §V: the CompressDirect set).
+
+All six operate *directly on the compressed grammar* — no decompression.
+Interfaces mirror the CD library: word count, sort, inverted index, term
+vector, sequence count, ranked inverted index.
+
+Global reductions ("the paper's reduceResultKernel / thread-safe global hash
+table") go through :func:`repro.kernels.ops.weighted_bincount` — the Pallas
+MXU histogram kernel — when ``backend="pallas"``, or its jnp oracle
+otherwise (identical results; tests assert allclose).
+
+Per-file analytics use the batched per-file top-down weights.  The dense
+``[F, V]`` intermediates are fine at the assignment's scale; for corpora with
+1e5+ files the store keeps the per-file CSR produced by
+:func:`term_vector_sparse` (host path, same math, sparse layout).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .grammar import GrammarArrays
+from .traversal import per_file_weights, top_down_weights
+from . import sequence as _sequence
+
+
+def _global_reduce(ids: jnp.ndarray, vals: jnp.ndarray, nbins: int,
+                   backend: str) -> jnp.ndarray:
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        return kops.weighted_bincount(ids, vals, nbins)
+    return jax.ops.segment_sum(vals, ids, num_segments=nbins)
+
+
+# ------------------------------------------------------------------ apps --
+def word_count(ga: GrammarArrays, method: str = "auto",
+               backend: str = "jnp") -> jnp.ndarray:
+    """counts[v] = occurrences of word v in the whole corpus."""
+    method = _pick(ga, method)
+    w = top_down_weights(ga, method=method)
+    vals = jnp.asarray(ga.tw_cnt, jnp.float32) * w[jnp.asarray(ga.tw_rule)]
+    return _global_reduce(jnp.asarray(ga.tw_word), vals, ga.vocab_size, backend)
+
+
+def sort_words(ga: GrammarArrays, method: str = "auto",
+               backend: str = "jnp") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Words sorted by frequency (desc). Returns (word_ids, counts)."""
+    counts = word_count(ga, method=method, backend=backend)
+    order = jnp.argsort(-counts, stable=True)
+    return order, counts[order]
+
+
+def term_vector(ga: GrammarArrays, method: str = "auto") -> jnp.ndarray:
+    """tv[f, v] = occurrences of word v in file f.  Dense [F, V]."""
+    method = _pick(ga, method)
+    Wf = per_file_weights(ga, method=method)           # [R, F]
+    contrib = Wf[jnp.asarray(ga.tw_rule), :] * \
+        jnp.asarray(ga.tw_cnt, jnp.float32)[:, None]   # [T, F]
+    tv = jax.ops.segment_sum(contrib, jnp.asarray(ga.tw_word),
+                             num_segments=ga.vocab_size)  # [V, F]
+    tv = tv.T
+    tv = tv.at[ga.fword_file, ga.fword_word].add(
+        ga.fword_cnt.astype(np.float32))
+    return tv
+
+
+def inverted_index(ga: GrammarArrays, method: str = "auto") -> jnp.ndarray:
+    """ii[f, v] = True iff word v occurs in file f."""
+    return term_vector(ga, method=method) > 0
+
+
+def ranked_inverted_index(ga: GrammarArrays, method: str = "auto"
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """For each word: files ranked by frequency (desc), with counts.
+
+    Returns (ranking [V, F] of file ids, counts [V, F] aligned to ranking).
+    """
+    tv = term_vector(ga, method=method)                # [F, V]
+    order = jnp.argsort(-tv, axis=0, stable=True)      # [F, V]
+    ranked = jnp.take_along_axis(tv, order, axis=0)    # [F, V]
+    return order.T, ranked.T
+
+
+def sequence_count(ga: GrammarArrays, l: int = 3, method: str = "auto"
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+    """Distinct l-gram counts (paper §IV-D).  See core/sequence.py."""
+    return _sequence.sequence_count(ga, l=l, method=_pick(ga, method))
+
+
+# ---------------------------------------------------------------- helpers --
+def _pick(ga: GrammarArrays, method: str) -> str:
+    if method != "auto":
+        return method
+    from .selector import select_traversal
+    return select_traversal(ga)
+
+
+def term_vector_sparse(ga: GrammarArrays) -> Tuple[np.ndarray, np.ndarray,
+                                                   np.ndarray]:
+    """Host sparse per-file counts: returns COO (file, word, count).
+
+    Frontier propagation of (file, rule, weight) triplets with per-level
+    dedup — the scalable path for 1e5+-file corpora where dense [F, V] is
+    not materializable.  Same math as :func:`term_vector`.
+    """
+    R = ga.num_rules
+    # per-file rule weights, propagated sparsely level by level
+    from collections import defaultdict
+    Wf: defaultdict = defaultdict(float)       # (rule, file) -> weight
+    for c, f, q in zip(ga.fedge_child, ga.fedge_file, ga.fedge_freq):
+        Wf[(int(c), int(f))] += float(q)
+    by_level = [[] for _ in range(ga.num_levels)]
+    for e in range(ga.num_edges):
+        p = int(ga.edge_parent[e])
+        if p != 0:
+            by_level[int(ga.level[p])].append(e)
+    for lv in range(ga.num_levels):
+        for e in by_level[lv]:
+            p, c, q = (int(ga.edge_parent[e]), int(ga.edge_child[e]),
+                       float(ga.edge_freq[e]))
+            for (r, f), w in list(Wf.items()):
+                if r == p:
+                    Wf[(c, f)] += q * w
+    out: defaultdict = defaultdict(float)      # (file, word) -> count
+    tw_by_rule = defaultdict(list)
+    for r, w, c in zip(ga.tw_rule, ga.tw_word, ga.tw_cnt):
+        tw_by_rule[int(r)].append((int(w), float(c)))
+    for (r, f), wt in Wf.items():
+        for (w, c) in tw_by_rule.get(r, ()):
+            out[(f, w)] += wt * c
+    for f, w, c in zip(ga.fword_file, ga.fword_word, ga.fword_cnt):
+        out[(int(f), int(w))] += float(c)
+    if not out:
+        return (np.zeros(0, np.int32),) * 3
+    items = sorted(out.items())
+    ff = np.array([k[0] for k, _ in items], np.int32)
+    ww = np.array([k[1] for k, _ in items], np.int32)
+    cc = np.array([v for _, v in items], np.float32)
+    return ff, ww, cc

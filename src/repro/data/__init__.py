@@ -1,0 +1,18 @@
+"""Data plane: TADOC-compressed corpora feeding the training stack.
+
+tokenizer.py — word-level tokenizer + vocab (vocab stats come from TADOC
+word_count, i.e. computed on the *compressed* corpus).
+synthetic.py — corpus generators shaped like the paper's Table II datasets.
+store.py     — on-disk compressed corpus (grammar arrays + vocab).
+pipeline.py  — deterministic sharded batch iterator over the compressed
+store using random-access window expansion (no decompression of the
+corpus as a whole, paper [3]).
+"""
+
+from .tokenizer import Tokenizer
+from .store import CompressedCorpus
+from .pipeline import BatchPipeline, PipelineState
+from . import synthetic
+
+__all__ = ["Tokenizer", "CompressedCorpus", "BatchPipeline", "PipelineState",
+           "synthetic"]

@@ -1,0 +1,92 @@
+"""On-disk compressed corpus: grammar arrays + metadata, single .npz.
+
+The corpus is stored *compressed* (the grammar), never as raw tokens.  The
+training pipeline and the analytics engine both read this store; analytics
+never decompress, batches are produced by window expansion (grammar.py
+``expand_range``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from dataclasses import dataclass
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core import GrammarArrays, compress_files, flatten
+from repro.core.grammar import expand_range
+
+
+_ARRAY_FIELDS = [f.name for f in dataclasses.fields(GrammarArrays)
+                 if f.type == "np.ndarray"]
+_META_FIELDS = ["vocab_size", "num_files", "num_rules", "num_levels"]
+
+
+@dataclass
+class CompressedCorpus:
+    ga: GrammarArrays
+    file_starts: np.ndarray     # [F] global terminal offset of each file
+    file_lens: np.ndarray       # [F]
+
+    # ------------------------------------------------------------ build --
+    @classmethod
+    def build(cls, files: List[np.ndarray], vocab_size: int
+              ) -> "CompressedCorpus":
+        g, nf = compress_files(files, vocab_size)
+        ga = flatten(g, vocab_size, nf)
+        lens = np.array([len(f) for f in files], np.int64)
+        # +1 per preceding splitter
+        starts = np.zeros(nf, np.int64)
+        np.cumsum(lens[:-1] + 1, out=starts[1:])
+        return cls(ga=ga, file_starts=starts, file_lens=lens)
+
+    # --------------------------------------------------------------- io --
+    def save(self, path: str) -> None:
+        arrays = {name: getattr(self.ga, name) for name in _ARRAY_FIELDS}
+        arrays["file_starts"] = self.file_starts
+        arrays["file_lens"] = self.file_lens
+        meta = {name: int(getattr(self.ga, name)) for name in _META_FIELDS}
+        tmp = path + ".tmp.npz"
+        np.savez_compressed(tmp, _meta=json.dumps(meta), **arrays)
+        os.replace(tmp, path)  # atomic publish (checkpointing convention)
+
+    @classmethod
+    def load(cls, path: str) -> "CompressedCorpus":
+        z = np.load(path, allow_pickle=False)
+        meta = json.loads(str(z["_meta"]))
+        kw = {name: z[name] for name in _ARRAY_FIELDS}
+        kw.update(meta)
+        ga = GrammarArrays(**kw)
+        return cls(ga=ga, file_starts=z["file_starts"],
+                   file_lens=z["file_lens"])
+
+    # ------------------------------------------------------------ reads --
+    @property
+    def total_tokens(self) -> int:
+        return int(self.file_lens.sum())
+
+    def window(self, file_id: int, offset: int, length: int) -> np.ndarray:
+        """Expand `length` word tokens of file `file_id` from `offset`,
+        clamped to the file (no decompression outside the window)."""
+        start = int(self.file_starts[file_id]) + int(offset)
+        length = int(min(length, self.file_lens[file_id] - offset))
+        return expand_range(self.ga, start, length)
+
+    def global_window(self, offset: int, length: int) -> np.ndarray:
+        """Expand from the concatenated corpus stream (splitters included —
+        callers use them as document separators)."""
+        return expand_range(self.ga, int(offset), int(length))
+
+    def stats(self) -> dict:
+        return {
+            "files": int(self.ga.num_files),
+            "rules": int(self.ga.num_rules),
+            "vocab": int(self.ga.vocab_size),
+            "tokens": self.total_tokens,
+            "grammar_symbols": int(self.ga.body.shape[0]),
+            "compression_ratio": float(self.ga.compression_ratio()),
+            "dag_depth": int(self.ga.num_levels),
+        }

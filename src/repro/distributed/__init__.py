@@ -1,0 +1,10 @@
+"""Distribution: sharding policy, pipeline stages, elastic re-mesh."""
+
+from .sharding import (MeshRules, default_rules, spec_for, param_shardings,
+                       batch_shardings, batch_spec, cache_shardings,
+                       replicated)
+from .elastic import reshard_tree, elastic_pipeline
+
+__all__ = ["MeshRules", "default_rules", "spec_for", "param_shardings",
+           "batch_shardings", "batch_spec", "cache_shardings", "replicated",
+           "reshard_tree", "elastic_pipeline"]

@@ -1,0 +1,46 @@
+"""Elastic scaling: resume a job on a different device count.
+
+Two pieces make the framework elastic:
+
+1. **State re-sharding** — checkpoints are topology-free (full arrays +
+   manifest, checkpoint/ckpt.py), so resuming on a new mesh is just
+   ``device_put`` with the new rules: ``reshard_tree`` below.
+2. **Data re-partitioning** — the pipeline is stateless-deterministic in
+   (seed, step) and takes (shard, num_shards) at construction
+   (data/pipeline.py), so a new data-parallel degree re-partitions the same
+   global stream with no drift: ``elastic_pipeline``.
+
+The only constraint is divisibility (global_batch % new_dp == 0); the
+driver validates and refuses otherwise (a fleet controller would pick the
+nearest valid degree).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh
+
+from repro.data import BatchPipeline, CompressedCorpus
+from .sharding import MeshRules, param_shardings, default_rules
+
+
+def reshard_tree(tree: Any, axes_tree: Any, mesh: Mesh,
+                 rules: Optional[MeshRules] = None) -> Any:
+    """Place a (restored) pytree onto a new mesh under the sharding rules."""
+    rules = rules or default_rules(mesh)
+    sh = param_shardings(axes_tree, tree, mesh, rules)
+    return jax.tree.map(jax.device_put, tree, sh)
+
+
+def elastic_pipeline(corpus: CompressedCorpus, *, global_batch: int,
+                     seq_len: int, seed: int, resume_step: int,
+                     shard: int, num_shards: int) -> BatchPipeline:
+    if global_batch % num_shards:
+        raise ValueError(
+            f"elastic resize invalid: global_batch {global_batch} "
+            f"not divisible by new dp degree {num_shards}")
+    return BatchPipeline(corpus, global_batch=global_batch, seq_len=seq_len,
+                         seed=seed, shard=shard, num_shards=num_shards,
+                         start_step=resume_step, prefetch=0)

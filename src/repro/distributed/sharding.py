@@ -1,0 +1,182 @@
+"""Logical-axis -> mesh sharding policy (DP / FSDP / TP / EP / SP).
+
+Model code tags every parameter dim with a logical axis name
+(models/layers.py Boxed).  This module maps those names onto the production
+mesh:
+
+  * TP   — "heads"/"kv_heads"/"ffn"/"vocab"/"expert"/"ssm_*" -> "model"
+  * FSDP — "embed" (the d_model dim every matrix has) -> fsdp axes
+           ("data", or ("pod","data") for cross-pod ZeRO-3)
+  * DP   — batch dims of activations/inputs -> ("pod","data")
+  * SP   — decode caches: kv-heads -> "model" when divisible, otherwise the
+           *sequence* dim shards over "model" (context parallelism; the
+           attention reduction over KV becomes a psum GSPMD inserts)
+
+Every mapping is divisibility-checked against the mesh; a dim that does not
+divide falls back to replication (never a compile error).  One mesh axis is
+never assigned twice in a single spec (first logical dim wins).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisAssign = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    """logical axis name -> mesh axis (or tuple of mesh axes)."""
+    rules: Dict[str, AxisAssign]
+    batch_axes: Tuple[str, ...] = ("pod", "data")
+
+    def assign(self, name: Optional[str]) -> AxisAssign:
+        if name is None:
+            return None
+        return self.rules.get(name)
+
+
+def default_rules(mesh: Mesh, fsdp_over_pod: bool = False) -> MeshRules:
+    has_pod = "pod" in mesh.axis_names
+    fsdp: AxisAssign = (("pod", "data") if (fsdp_over_pod and has_pod)
+                        else "data")
+    batch = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return MeshRules(rules={
+        "vocab": "model",
+        "ffn": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "expert": "model",
+        "ssm_inner": "model",
+        "ssm_heads": "model",
+        "embed": fsdp,
+        "layers": None,
+        "head_dim": None,
+    }, batch_axes=batch)
+
+
+def _axis_size(mesh: Mesh, assign: AxisAssign) -> int:
+    if assign is None:
+        return 1
+    if isinstance(assign, str):
+        return mesh.shape[assign]
+    return int(np.prod([mesh.shape[a] for a in assign]))
+
+
+def spec_for(axes: Sequence[Optional[str]], shape: Sequence[int],
+             mesh: Mesh, rules: MeshRules) -> P:
+    """PartitionSpec for one array given its logical axes + shape."""
+    used: set = set()
+    parts = []
+    for name, dim in zip(axes, shape):
+        assign = rules.assign(name)
+        if assign is None:
+            parts.append(None)
+            continue
+        mesh_axes = (assign,) if isinstance(assign, str) else tuple(assign)
+        if any(a in used for a in mesh_axes):
+            parts.append(None)
+            continue
+        size = _axis_size(mesh, assign)
+        if size <= 1 or dim % size != 0:
+            parts.append(None)
+            continue
+        used.update(mesh_axes)
+        parts.append(assign)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def param_shardings(axes_tree, shape_tree, mesh: Mesh, rules: MeshRules):
+    """NamedSharding tree for a param pytree.
+
+    ``axes_tree``: logical axes per leaf (from unbox); ``shape_tree``:
+    matching arrays / ShapeDtypeStructs."""
+    def one(axes, arr):
+        return NamedSharding(mesh, spec_for(axes, arr.shape, mesh, rules))
+    return jax.tree.map(one, axes_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+def batch_spec(rules: MeshRules, ndim: int = 2) -> P:
+    """[B, S, ...] activations/inputs: batch over (pod, data)."""
+    ba = rules.batch_axes
+    assign = ba[0] if len(ba) == 1 else tuple(ba)
+    return P(assign, *([None] * (ndim - 1)))
+
+
+def batch_shardings(batch_tree, mesh: Mesh, rules: MeshRules):
+    def one(arr):
+        b = arr.shape[0]
+        size = _axis_size(mesh, tuple(rules.batch_axes)
+                          if len(rules.batch_axes) > 1 else rules.batch_axes[0])
+        if size > 1 and b % size == 0:
+            return NamedSharding(mesh, batch_spec(rules, arr.ndim))
+        return NamedSharding(mesh, P())
+    return jax.tree.map(one, batch_tree)
+
+
+# ----------------------------------------------------------- decode cache --
+def cache_shardings(cfg, cache_tree, mesh: Mesh, rules: MeshRules):
+    """Sharding for the decode cache pytree (models.init_cache layout).
+
+    KV entries  [repeats, B, maxlen, Hkv, hd]:
+        B -> batch axes; Hkv -> model if divisible, else maxlen -> model
+        (and for batch==1, maxlen spreads over *all* non-used axes: the
+        long-context single-stream case).
+    SSM state h [repeats, B, H, P, N]: B -> batch, H -> model.
+    conv state  [repeats, B, K-1, conv_dim]: B -> batch, conv_dim -> model.
+    cross K/V   [layers, B, T_enc, Hkv, hd]: like KV.
+    """
+    model_sz = mesh.shape.get("model", 1)
+    batch_assign = (tuple(rules.batch_axes) if len(rules.batch_axes) > 1
+                    else rules.batch_axes[0])
+    batch_sz = _axis_size(mesh, batch_assign)
+
+    def kv_spec(shape):
+        _, B, L, Hkv, _ = shape
+        b_ax = batch_assign if (batch_sz > 1 and B % batch_sz == 0) else None
+        if Hkv % model_sz == 0:
+            return P(None, b_ax, None, "model", None)
+        if B == 1 and b_ax is not None:
+            # single stream: spread sequence over everything available
+            all_ax = (tuple(rules.batch_axes) + ("model",))
+            if L % _axis_size(mesh, all_ax) == 0:
+                return P(None, None, all_ax, None, None)
+        if L % model_sz == 0:
+            return P(None, b_ax, "model", None, None)
+        return P(None, b_ax)
+
+    def one(path, arr):
+        keys = [str(getattr(p, "key", "")) for p in path]
+        shape = arr.shape
+        if "pos" in keys:
+            return NamedSharding(mesh, P())
+        if keys and keys[-1] in ("k", "v") or "cross_k" in keys or \
+                "cross_v" in keys:
+            return NamedSharding(mesh, kv_spec(shape))
+        if keys and keys[-1] == "h":                 # [rep, B, H, P, N]
+            _, B, H, _, _ = shape
+            b_ax = batch_assign if (batch_sz > 1 and B % batch_sz == 0) else None
+            m_ax = "model" if H % model_sz == 0 else None
+            return NamedSharding(mesh, P(None, b_ax, m_ax, None, None))
+        if keys and keys[-1] == "conv":              # [rep, B, K-1, convd]
+            _, B, _, cd = shape
+            b_ax = batch_assign if (batch_sz > 1 and B % batch_sz == 0) else None
+            m_ax = "model" if cd % model_sz == 0 else None
+            return NamedSharding(mesh, P(None, b_ax, None, m_ax))
+        return NamedSharding(mesh, P())
+
+    flat, treedef = jax.tree.flatten_with_path(cache_tree)
+    return jax.tree.unflatten(treedef, [one(p, a) for p, a in flat])
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,5 @@
+# Pallas TPU kernels for the paper's two compute hot spots:
+#   bincount.py  — global result reduction (replaces §IV-C atomic hash tables)
+#   propagate.py — ELL frontier propagation (replaces §IV-B per-thread rule walk)
+# ops.py: jit'd wrappers (auto interpret on CPU); ref.py: pure-jnp oracles.
+from . import ops, ref  # noqa: F401

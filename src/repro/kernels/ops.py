@@ -1,0 +1,64 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to auto: real lowering on TPU, interpret mode on CPU
+(the assignment's validation mode).  Both wrappers fall back to the jnp
+reference for degenerate shapes where a kernel launch is pure overhead.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .bincount import weighted_bincount_pallas
+from .propagate import ell_row_sums_pallas
+
+
+@functools.lru_cache(None)
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def _interp(interpret) -> bool:
+    return (not _on_tpu()) if interpret is None else bool(interpret)
+
+
+def weighted_bincount(ids: jnp.ndarray, vals: jnp.ndarray, nbins: int,
+                      interpret: bool | None = None) -> jnp.ndarray:
+    """MXU histogram: out[b] = sum(vals[ids == b]).  See bincount.py."""
+    if ids.shape[0] == 0:
+        return jnp.zeros(nbins, jnp.float32)
+    if ids.shape[0] < 64 or nbins < 8:        # launch overhead dominates
+        return ref.weighted_bincount_ref(ids, vals, nbins)
+    return weighted_bincount_pallas(ids, vals, nbins,
+                                    interpret=_interp(interpret))
+
+
+def ell_row_sums(weights: jnp.ndarray, src: jnp.ndarray, freq: jnp.ndarray,
+                 interpret: bool | None = None) -> jnp.ndarray:
+    """ELL gather row sums: the frontier-propagation hot loop."""
+    if src.shape[0] == 0:
+        return jnp.zeros(0, jnp.float32)
+    # full weight vector must fit VMEM (~16MB); fall back above ~3.5M rules
+    if weights.shape[0] > (3 << 20) or src.shape[0] < 64:
+        return ref.ell_row_sums_ref(weights, src, freq)
+    return ell_row_sums_pallas(weights, src, freq,
+                               interpret=_interp(interpret))
+
+
+def ell_propagate(weights: jnp.ndarray, src: jnp.ndarray, freq: jnp.ndarray,
+                  dst: jnp.ndarray, num_rules: int,
+                  interpret: bool | None = None) -> jnp.ndarray:
+    """delta[child] += freq * weights[parent]: one full propagation round.
+
+    ``weights`` should already be mask-gated (weight * active) — see
+    propagate.py docstring.
+    """
+    sums = ell_row_sums(weights, src, freq, interpret=interpret)
+    return jax.ops.segment_sum(sums, dst, num_segments=num_rules)

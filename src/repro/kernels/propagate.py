@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: ELL frontier propagation (the traversal hot spot).
+
+One masked round of the paper's ``topDownKernel`` (Algorithm 1) is, per
+in-edge of each rule, ``delta[child] += freq * weight[parent]`` for parents
+active this round.  grammar.py lays in-edges out in ELL format — uniform
+width rows, oversized rules split across rows (the paper's 16x thread-group
+threshold becomes row splitting, DESIGN.md §2) — so a round is:
+
+  row_sums[row] = sum_k freq[row, k] * weight[src[row, k]]      (this kernel)
+  delta         = segment_sum(row_sums, dst)                    (ops.py)
+
+Masking is folded into the input: the wrapper passes ``weight * mask`` so
+inactive parents contribute zero — the mask never enters the kernel.
+
+The gather ``weight[src]`` runs from a VMEM-resident copy of the full weight
+vector (BlockSpec maps the whole vector into every grid step; the grammar's
+rule count must fit VMEM — ~4M rules at f32.  Beyond that the wrapper falls
+back to the jnp path.)  Gathers from VMEM lower via Mosaic's dynamic-gather
+support; we validate through ``interpret=True`` on CPU per the assignment.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BR = 256   # rows per block (sublane-dim multiple of 8)
+
+
+def _kernel(w_ref, src_ref, freq_ref, out_ref):
+    w = w_ref[0, :]                      # [R] full weight vector (VMEM)
+    src = src_ref[...]                   # [BR, W]
+    freq = freq_ref[...]                 # [BR, W] float32
+    gathered = jnp.take(w, src.reshape(-1), axis=0).reshape(src.shape)
+    out_ref[...] = (gathered * freq).sum(axis=1, keepdims=True)  # [BR, 1]
+
+
+@functools.partial(jax.jit, static_argnames=("br", "interpret"))
+def ell_row_sums_pallas(weights: jnp.ndarray, src: jnp.ndarray,
+                        freq: jnp.ndarray, br: int = DEFAULT_BR,
+                        interpret: bool = True) -> jnp.ndarray:
+    """row_sums[r] = sum_k freq[r, k] * weights[src[r, k]].
+
+    src/freq: [rows, W] ELL arrays (padding: src=0, freq=0).
+    """
+    rows, w = src.shape
+    pad = (-rows) % br
+    src_p = jnp.pad(src.astype(jnp.int32), ((0, pad), (0, 0)))
+    freq_p = jnp.pad(freq.astype(jnp.float32), ((0, pad), (0, 0)))
+    rtot = rows + pad
+    wvec = weights.astype(jnp.float32)[None, :]      # [1, R]
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(rtot // br,),
+        in_specs=[
+            pl.BlockSpec((1, wvec.shape[1]), lambda i: (0, 0)),  # full weights
+            pl.BlockSpec((br, w), lambda i: (i, 0)),
+            pl.BlockSpec((br, w), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rtot, 1), jnp.float32),
+        interpret=interpret,
+    )(wvec, src_p, freq_p)
+    return out[:rows, 0]

@@ -1,0 +1,23 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose references)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def weighted_bincount_ref(ids: jnp.ndarray, vals: jnp.ndarray,
+                          nbins: int) -> jnp.ndarray:
+    """out[b] = sum(vals[ids == b]); ids outside [0, nbins) ignored."""
+    ids = ids.astype(jnp.int32)
+    valid = (ids >= 0) & (ids < nbins)
+    safe = jnp.where(valid, ids, 0)
+    v = jnp.where(valid, vals.astype(jnp.float32), 0.0)
+    return jax.ops.segment_sum(v, safe, num_segments=nbins)
+
+
+def ell_row_sums_ref(weights: jnp.ndarray, src: jnp.ndarray,
+                     freq: jnp.ndarray) -> jnp.ndarray:
+    """row_sums[r] = sum_k freq[r, k] * weights[src[r, k]]."""
+    return (weights.astype(jnp.float32)[src] *
+            freq.astype(jnp.float32)).sum(axis=1)

@@ -1,0 +1,3 @@
+# Launchers: mesh factory, multi-pod dry-run, roofline extraction,
+# train/serve drivers.  NOTE: dryrun.py sets XLA_FLAGS at import; import it
+# only in dedicated processes.

@@ -1,0 +1,336 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           "--xla_llvm_disable_expensive_passes=true")
+# ^ MUST precede every other import: jax locks the device count at first
+# init.  512 placeholder host devices back both the 16x16 single-pod mesh
+# and the 2x16x16 multi-pod mesh.  (Only the dry-run does this — tests and
+# benchmarks see the real single CPU device.)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the exact assigned config and its ShapeDtypeStruct inputs
+     (configs/base.py input_specs — no allocation anywhere);
+  2. derives parameter/optimizer/cache shardings from the logical axes
+     (distributed/sharding.py: DP x FSDP x TP x EP x SP);
+  3. ``jax.jit(step).lower(...).compile()`` on the production mesh;
+  4. records memory_analysis, cost_analysis, the collective-byte histogram
+     parsed from the compiled HLO, and the model-FLOPs accounting into
+     ``experiments/dryrun/<arch>__<shape>__<mesh>.json``.
+
+Resumable: existing JSONs are skipped unless --force.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-9b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import functools
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, ALIASES, get_config, input_specs, \
+    shape_supported
+from repro.distributed import (batch_shardings, cache_shardings,
+                               default_rules, param_shardings, replicated)
+from repro.launch.mesh import make_production_mesh
+from repro.models import init_lm, unbox, init_cache
+from repro.models.config import LM_SHAPES
+from repro.models.partitioning import activation_policy
+from jax.sharding import PartitionSpec as P
+from repro.serving import make_serve_step, make_prefill_step
+from repro.training import AdamW, make_train_step
+from repro.utils.hlo_analysis import (op_histogram, parse_collectives,
+                                      total_collective_bytes)
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _attach(structs, shardings):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        structs, shardings)
+
+
+def model_flops(cfg, shape_name: str) -> float:
+    """MODEL_FLOPS per step: 6*N*D train (N active params, D tokens),
+    2*N*D forward-only (prefill/decode)."""
+    spec = LM_SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if spec.kind == "train":
+        tokens = spec.global_batch * spec.seq_len
+        return 6.0 * n_active * tokens
+    if spec.kind == "prefill":
+        tokens = spec.global_batch * spec.seq_len
+        return 2.0 * n_active * tokens
+    tokens = spec.global_batch * 1           # one token per stream
+    return 2.0 * n_active * tokens
+
+
+def make_activation_policy(cfg, shape_name: str, mesh, rules,
+                           variant: str = "baseline") -> Dict:
+    """PartitionSpecs pinning activations through scan/remat boundaries.
+
+    act_btd: [B, S/1, d] -> batch over (pod, data), replicated over model.
+    logits:  [B, S, V]   -> batch over (pod, data), vocab over model.
+    Skipped when the dim does not divide (long_500k batch=1)."""
+    spec = LM_SHAPES[shape_name]
+    ba = rules.batch_axes
+    b_assign = ba[0] if len(ba) == 1 else tuple(ba)
+    import numpy as _np
+    b_size = int(_np.prod([mesh.shape[a] for a in ba]))
+    model_sz = mesh.shape.get("model", 1)
+    pol: Dict = {}
+    b_ok = spec.global_batch % b_size == 0
+    v_ok = cfg.vocab_size % model_sz == 0
+    s_ok = spec.seq_len % model_sz == 0 and spec.kind in ("train", "prefill")
+    if b_ok:
+        if variant == "fullsp" and s_ok:
+            # Megatron-style full sequence parallelism: the layer carry
+            # stays seq-sharded over `model`; FFN/attention projections
+            # all-gather once in bf16 and reduce-scatter back, replacing
+            # the baseline's per-layer f32 boundary gathers.
+            pol["act_btd"] = P(b_assign, "model", None)
+        else:
+            pol["act_btd"] = P(b_assign, None, None)
+        pol["logits"] = P(b_assign, None, "model" if v_ok else None)
+    elif v_ok:
+        pol["logits"] = P(None, None, "model")
+    # SP attention: shard q over seq on the model axis whenever head counts
+    # don't divide it (qwen2 14H, qwen1.5/whisper 20H, and GQA reshapes
+    # where kv_heads < model); full-seq shapes only (decode q has S=1).
+    if spec.kind in ("train", "prefill") and cfg.num_heads:
+        heads_ok = (cfg.num_kv_heads % model_sz == 0)
+        if not heads_ok and spec.seq_len % model_sz == 0 and b_ok:
+            pol["attn_q"] = P(b_assign, "model", None, None)
+    return pol
+
+
+def build_cell(arch: str, shape_name: str, mesh, rules,
+               microbatches: int = 1, remat: bool = True,
+               fsdp_over_pod: bool = False, unroll: bool = False):
+    """Returns (step_fn, arg_structs: tuple, donate) ready to lower."""
+    cfg = get_config(arch)
+    spec = LM_SHAPES[shape_name]
+
+    # ---- parameter structs (eval_shape: zero allocation) ----
+    boxed = jax.eval_shape(functools.partial(init_lm, cfg=cfg),
+                           jax.random.PRNGKey(0))
+    p_structs, axes = unbox(boxed)
+    p_shard = param_shardings(axes, p_structs, mesh, rules)
+    params = _attach(p_structs, p_shard)
+
+    ins = input_specs(cfg, shape_name)
+
+    if spec.kind == "train":
+        opt = AdamW(lr=1e-4)
+        o_structs = jax.eval_shape(opt.init, p_structs)
+        # moments shard exactly like their params; count is scalar
+        o_shard = type(o_structs)(
+            count=replicated(mesh),
+            mu=param_shardings(axes, o_structs.mu, mesh, rules),
+            nu=param_shardings(axes, o_structs.nu, mesh, rules))
+        opt_state = _attach(o_structs, o_shard)
+        batch = {k: v for k, v in ins.items()}
+        b_shard = batch_shardings(batch, mesh, rules)
+        batch = _attach(batch, b_shard)
+        step = make_train_step(cfg, opt, remat=remat,
+                               microbatches=microbatches, unroll=unroll)
+        return cfg, step, (params, opt_state, batch), (0, 1)
+
+    if spec.kind == "prefill":
+        step = make_prefill_step(cfg, unroll=unroll)
+        batch = dict(ins)
+        b_shard = batch_shardings(batch, mesh, rules)
+        batch = _attach(batch, b_shard)
+        args = (params, batch["tokens"])
+        kw = {}
+        if "extra_embeds" in batch:
+            args = args + (batch["extra_embeds"],)
+
+            def step2(p, t, e):
+                return step(p, t, extra_embeds=e)
+            return cfg, step2, args, ()
+        return cfg, step, args, ()
+
+    # decode: serve_step against a seq_len-deep cache
+    c_structs = jax.eval_shape(
+        functools.partial(init_cache, cfg, spec.global_batch, spec.seq_len))
+    c_shard = cache_shardings(cfg, c_structs, mesh, rules)
+    cache = _attach(c_structs, c_shard)
+    tokens = jax.ShapeDtypeStruct(
+        (spec.global_batch, 1), jnp.int32,
+        sharding=batch_shardings(
+            {"t": jax.ShapeDtypeStruct((spec.global_batch, 1), jnp.int32)},
+            mesh, rules)["t"])
+    serve = make_serve_step(cfg, unroll=unroll)
+
+    def step(p, c, t):
+        nxt, c, _ = serve(p, c, t)
+        return nxt, c
+
+    return cfg, step, (params, cache, tokens), (1,)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             out_dir: str = OUT_DIR, force: bool = False,
+             microbatches: int = 1, remat="full",
+             fsdp_over_pod: bool = False, tag: str = "",
+             policy_variant: str = "baseline", fast: bool = False,
+             rules=None) -> Optional[Dict]:
+    cfg = get_config(arch)
+    name = f"{ALIASES.get(arch, arch)}__{shape_name}__{mesh_kind}"
+    if tag:
+        name += f"__{tag}"
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, name + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    ok, reason = shape_supported(cfg, shape_name)
+    if not ok:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+               "status": "skipped", "reason": reason}
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[dryrun] SKIP {name}: {reason}")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rules = rules or default_rules(mesh, fsdp_over_pod=fsdp_over_pod)
+    policy = make_activation_policy(cfg, shape_name, mesh, rules,
+                                    variant=policy_variant)
+    t0 = time.time()
+    try:
+        # pass 1 — production form (scan over layers): buffer reuse across
+        # layers is what a real compiler does; this is the memory report.
+        cfg, step, args, donate = build_cell(
+            arch, shape_name, mesh, rules, microbatches=microbatches,
+            remat=remat, fsdp_over_pod=fsdp_over_pod, unroll=False)
+        with mesh, activation_policy(policy):
+            lowered = jax.jit(step, donate_argnums=donate).lower(*args)
+            t1 = time.time()
+            compiled_s = lowered.compile()
+            mem = compiled_s.memory_analysis()
+        if fast:
+            # fast mode (mamba2: 64 unrolled SSD layers do not compile in
+            # container time): reuse the scan-pass artifact; cost_analysis
+            # counted each while body ONCE, so the roofline corrects
+            # per-layer quantities by the scan trip count (recorded below).
+            t2 = time.time()
+            cost = compiled_s.cost_analysis() or {}
+            text = compiled_s.as_text()
+        else:
+            # pass 2 — unrolled layers: XLA cost_analysis counts a while
+            # body once (not x trip count), so FLOPs/collective bytes need
+            # the layers inline.  (Temp bytes from this pass are
+            # pessimistic on the CPU backend and are NOT reported.)
+            cfg, step, args, donate = build_cell(
+                arch, shape_name, mesh, rules, microbatches=microbatches,
+                remat=remat, fsdp_over_pod=fsdp_over_pod, unroll=True)
+            with mesh, activation_policy(policy):
+                lowered_u = jax.jit(step, donate_argnums=donate).lower(*args)
+                compiled = lowered_u.compile()
+                t2 = time.time()
+                cost = compiled.cost_analysis() or {}
+                text = compiled.as_text()
+        colls = parse_collectives(text)
+        rec = {
+            "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+            "tag": tag, "status": "ok",
+            "devices": int(len(mesh.devices.flatten())),
+            "lower_s": round(t1 - t0, 2), "compile_s": round(t2 - t1, 2),
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "code_bytes": mem.generated_code_size_in_bytes,
+            },
+            "cost": {
+                "flops_per_device": float(cost.get("flops", -1.0)),
+                "bytes_per_device": float(cost.get("bytes accessed", -1.0)),
+            },
+            "collectives": colls,
+            "collective_bytes_per_device": total_collective_bytes(text),
+            "ops": op_histogram(text),
+            "model_flops_total": model_flops(cfg, shape_name),
+            "params_total": cfg.param_count(),
+            "params_active": cfg.active_param_count(),
+            "counting": "scan_body_once" if fast else "unrolled",
+            "scan_repeats": cfg.num_layers // cfg.block_size,
+        }
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        per_dev_gb = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                      ) / (1 << 30)
+        print(f"[dryrun] OK   {name}: compile {rec['compile_s']}s, "
+              f"{per_dev_gb:.2f} GiB/dev, "
+              f"{rec['cost']['flops_per_device']/1e9:.1f} GFLOP/dev, "
+              f"coll {rec['collective_bytes_per_device']/1e6:.1f} MB/dev")
+        return rec
+    except Exception as e:  # record failures; they are bugs to fix
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+               "status": "error", "error": repr(e),
+               "trace": traceback.format_exc()[-2000:]}
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[dryrun] FAIL {name}: {e}")
+        return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="assignment id, e.g. yi-9b (default: all)")
+    ap.add_argument("--shape", default=None,
+                    help="train_4k|prefill_32k|decode_32k|long_500k")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="full",
+                    choices=["full", "dots", "none"])
+    ap.add_argument("--fsdp-over-pod", action="store_true")
+    ap.add_argument("--policy", default="baseline",
+                    choices=["baseline", "fullsp"])
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--fast", action="store_true",
+                    help="single scan-pass compile (see run_cell docstring)")
+    args = ap.parse_args()
+
+    archs = ([args.arch] if args.arch else list(ALIASES.keys()))
+    shapes = ([args.shape] if args.shape else list(LM_SHAPES.keys()))
+    meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mk in meshes:
+                rec = run_cell(arch, shape, mk, out_dir=args.out,
+                               force=args.force,
+                               microbatches=args.microbatches,
+                               remat=(False if args.remat == "none"
+                                      else args.remat),
+                               fsdp_over_pod=args.fsdp_over_pod,
+                               policy_variant=args.policy,
+                               fast=args.fast,
+                               tag=args.tag)
+                if rec and rec.get("status") == "error":
+                    failures += 1
+    print(f"[dryrun] done, {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Serving launcher: batched KV-cache decode with request padding.
+
+    python -m repro.launch.serve --arch yi-9b --reduced --batch 8 --steps 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-9b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.models import init_cache, init_lm, reduced, unbox
+    from repro.serving import make_serve_step
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg, dtype="float32")
+    params, _ = unbox(init_lm(jax.random.PRNGKey(0), cfg))
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(
+        0, cfg.vocab_size, (args.batch, args.prompt_len)).astype(np.int32))
+    cache = init_cache(cfg, args.batch, args.prompt_len + args.steps)
+    sample = "greedy" if args.temperature == 0 else "categorical"
+    step = jax.jit(make_serve_step(cfg, sample=sample,
+                                   temperature=max(args.temperature, 1e-3)),
+                   donate_argnums=(1,), static_argnames=())
+
+    tok = None
+    key = jax.random.PRNGKey(0)
+    for t in range(args.prompt_len):
+        tok, cache, _ = step(params, cache, prompts[:, t:t + 1], key)
+    jax.block_until_ready(tok)
+    t0 = time.perf_counter()
+    gen = []
+    for _ in range(args.steps):
+        gen.append(int(tok[0, 0]))
+        key, sub = jax.random.split(key)
+        tok, cache, _ = step(params, cache, tok, sub)
+    jax.block_until_ready(tok)
+    dt = time.perf_counter() - t0
+    print(f"[serve] {args.arch}: {args.batch * args.steps / dt:.0f} tok/s "
+          f"(batch {args.batch})")
+    print(f"[serve] request 0 ids: {gen[:16]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Model zoo: the 10 assigned architectures on one unified LM skeleton."""
+
+from .config import ModelConfig, ShapeSpec, LM_SHAPES, reduced
+from .layers import Boxed, unbox, stack_boxed
+from .transformer import (init_lm, apply_lm, init_cache, decode_step,
+                          prefill_cross)
+
+__all__ = ["ModelConfig", "ShapeSpec", "LM_SHAPES", "reduced",
+           "Boxed", "unbox", "stack_boxed",
+           "init_lm", "apply_lm", "init_cache", "decode_step",
+           "prefill_cross"]

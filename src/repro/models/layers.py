@@ -1,0 +1,244 @@
+"""Core layers (pure JAX, no flax): params are dict pytrees whose leaves are
+``Boxed(value, axes)`` during init — ``axes`` are *logical* axis names that
+the distribution layer maps to mesh axes (DESIGN.md §4).  ``unbox`` splits
+the tree into (params, axes) before use.
+
+Logical axes: "vocab", "embed" (d_model), "heads", "kv_heads", "head_dim",
+"ffn", "expert", "ssm_*", None (replicated dim).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Boxed:
+    value: Any
+    axes: Tuple[Optional[str], ...]
+
+
+jax.tree_util.register_pytree_node(
+    Boxed,
+    lambda b: ((b.value,), b.axes),
+    lambda axes, ch: Boxed(ch[0], axes),
+)
+
+
+def _is_boxed(x) -> bool:
+    return isinstance(x, Boxed)
+
+
+def stack_boxed(trees):
+    """Stack a list of identically-structured Boxed trees along a new
+    leading "layers" axis (the scan dimension)."""
+    out = jax.tree.map(
+        lambda *bs: Boxed(jnp.stack([b.value for b in bs]),
+                          ("layers",) + bs[0].axes),
+        *trees, is_leaf=_is_boxed)
+    return out
+
+
+def unbox(tree):
+    params = jax.tree.map(lambda b: b.value, tree, is_leaf=_is_boxed)
+    axes = jax.tree.map(lambda b: b.axes, tree, is_leaf=_is_boxed)
+    return params, axes
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# ------------------------------------------------------------------ init --
+def dense_init(key, shape, axes, dtype, scale: float | None = None) -> Boxed:
+    fan_in = shape[0] if len(shape) > 1 else 1
+    scale = (1.0 / math.sqrt(fan_in)) if scale is None else scale
+    v = jax.random.normal(key, shape, jnp.float32) * scale
+    return Boxed(v.astype(dtype), axes)
+
+
+def zeros_init(shape, axes, dtype) -> Boxed:
+    return Boxed(jnp.zeros(shape, dtype), axes)
+
+
+def ones_init(shape, axes, dtype) -> Boxed:
+    return Boxed(jnp.ones(shape, dtype), axes)
+
+
+# ----------------------------------------------------------------- norms --
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32) +
+            bias.astype(jnp.float32)).astype(dt)
+
+
+# ------------------------------------------------------------------ rope --
+def rope_frequencies(head_dim: int, fraction: float, theta: float
+                     ) -> np.ndarray:
+    rot = int(head_dim * fraction) // 2 * 2
+    inv = 1.0 / (theta ** (np.arange(0, rot, 2, dtype=np.float64) / rot))
+    return inv.astype(np.float32)  # [rot/2]
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, inv_freq: jnp.ndarray
+               ) -> jnp.ndarray:
+    """x: [B, S, H, D]; positions: [B, S]; rotate the first 2*len(inv_freq)
+    channels (partial rotary, stablelm-style when fraction < 1)."""
+    rot = 2 * inv_freq.shape[0]
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    ang = positions[..., None].astype(jnp.float32) * inv_freq  # [B,S,rot/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = xr[..., ::2], xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([yr.astype(x.dtype), xp], axis=-1)
+
+
+# ------------------------------------------------------------------- ffn --
+def init_ffn(key, d_model: int, d_ff: int, act: str, dtype) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if act == "swiglu":
+        return {
+            "wi": dense_init(k1, (d_model, d_ff), ("embed", "ffn"), dtype),
+            "wg": dense_init(k2, (d_model, d_ff), ("embed", "ffn"), dtype),
+            "wo": dense_init(k3, (d_ff, d_model), ("ffn", "embed"), dtype),
+        }
+    return {
+        "wi": dense_init(k1, (d_model, d_ff), ("embed", "ffn"), dtype),
+        "bi": zeros_init((d_ff,), ("ffn",), dtype),
+        "wo": dense_init(k3, (d_ff, d_model), ("ffn", "embed"), dtype),
+        "bo": zeros_init((d_model,), ("embed",), dtype),
+    }
+
+
+def apply_ffn(p: Dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    if act == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+        return h @ p["wo"]
+    h = jax.nn.gelu((x @ p["wi"]) + p["bi"])
+    return h @ p["wo"] + p["bo"]
+
+
+# ------------------------------------------------------------- attention --
+def init_attention(key, cfg, cross: bool = False) -> Dict:
+    d, H, Hkv = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    dt = _dtype(cfg.dtype)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(k1, (d, H, hd), ("embed", "heads", "head_dim"), dt),
+        "wk": dense_init(k2, (d, Hkv, hd), ("embed", "kv_heads", "head_dim"), dt),
+        "wv": dense_init(k3, (d, Hkv, hd), ("embed", "kv_heads", "head_dim"), dt),
+        "wo": dense_init(k4, (H, hd, d), ("heads", "head_dim", "embed"), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = zeros_init((H, hd), ("heads", "head_dim"), dt)
+        p["bk"] = zeros_init((Hkv, hd), ("kv_heads", "head_dim"), dt)
+        p["bv"] = zeros_init((Hkv, hd), ("kv_heads", "head_dim"), dt)
+    return p
+
+
+def _qkv(p: Dict, x: jnp.ndarray, cfg) -> Tuple[jnp.ndarray, ...]:
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return q, k, v
+
+
+def gqa_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool, q_offset: int | jnp.ndarray = 0,
+                  kv_len: Optional[jnp.ndarray] = None,
+                  chunk: int = 0) -> jnp.ndarray:
+    """q: [B,Sq,H,D], k/v: [B,Skv,Hkv,D].  GQA by head-group reshape.
+
+    ``q_offset``: absolute position of q[0] (decode: cache length).
+    ``kv_len``: valid kv prefix length (decode with pre-allocated cache).
+    ``chunk`` > 0: scan over kv blocks with online softmax (bounded memory
+    for 32k prefill; the "flash-in-XLA" path).
+    """
+    B, Sq, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scale = 1.0 / math.sqrt(D)
+
+    q_pos = jnp.arange(Sq) + q_offset                       # [Sq]
+
+    if chunk and Skv > chunk and Skv % chunk == 0:
+        nblk = Skv // chunk
+        kb = kf.reshape(B, nblk, chunk, Hkv, D)
+        vb = vf.reshape(B, nblk, chunk, Hkv, D)
+
+        def step(carry, blk):
+            m, l, acc = carry
+            kj, vj, j = blk
+            kv_pos = j * chunk + jnp.arange(chunk)
+            s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, kj) * scale
+            mask = jnp.ones((Sq, chunk), bool)
+            if causal:
+                mask &= q_pos[:, None] >= kv_pos[None, :]
+            if kv_len is not None:
+                mask &= kv_pos[None, :] < kv_len
+            s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            # explicit re-mask: a fully-masked block would otherwise give
+            # exp(-1e30 - (-1e30)) == 1 and corrupt the running sum
+            p = jnp.exp(s - m_new[..., None]) * mask[None, :, None, None, :]
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bqhgk,bkhd->bqhgd", p, vj)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, Sq, Hkv, G), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, Sq, Hkv, G), jnp.float32)
+        a0 = jnp.zeros((B, Sq, Hkv, G, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            step, (m0, l0, a0),
+            (kb.swapaxes(0, 1), vb.swapaxes(0, 1), jnp.arange(nblk)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+    else:
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, kf) * scale
+        kv_pos = jnp.arange(Skv)
+        mask = jnp.ones((Sq, Skv), bool)
+        if causal:
+            mask &= q_pos[:, None] >= kv_pos[None, :]
+        if kv_len is not None:
+            mask &= kv_pos[None, :] < kv_len
+        s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bqhgk,bkhd->bqhgd", p, vf)
+
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def attn_out(p: Dict, ctx: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("bshk,hkd->bsd", ctx, p["wo"])

@@ -1,0 +1,48 @@
+"""Activation-sharding policy hook.
+
+GSPMD propagates parameter shardings well, but activation shardings can
+degrade through ``scan`` + ``remat`` boundaries (the carry's sharding is
+whatever the first iteration inferred).  Production frameworks pin
+activations with explicit constraints; we do the same without coupling
+model code to mesh axis names: the launcher installs a policy mapping
+*activation kinds* to PartitionSpecs, and model code calls
+``constrain(x, kind)`` at the few load-bearing points (embedding output,
+block carry, logits, decode cache updates).
+
+With no policy installed (unit tests, single-device runs) this is a no-op.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, Optional
+
+import jax
+
+_POLICY: Dict[str, object] = {}
+
+
+def set_policy(policy: Optional[Dict[str, object]]) -> None:
+    global _POLICY
+    _POLICY = dict(policy or {})
+
+
+def get_policy() -> Dict[str, object]:
+    return dict(_POLICY)
+
+
+@contextlib.contextmanager
+def activation_policy(policy: Dict[str, object]):
+    old = get_policy()
+    set_policy(policy)
+    try:
+        yield
+    finally:
+        set_policy(old)
+
+
+def constrain(x, kind: str):
+    spec = _POLICY.get(kind)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,207 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+Chunked SSD for training/prefill: the sequence is split into chunks of Q
+tokens; within a chunk the dual quadratic form runs on the MXU
+(``C B^T ⊙ decay`` matmuls), across chunks a small recurrent state
+[H, P, N] is carried by ``lax.scan`` — O(S·Q) work, O(S) memory, exactly
+the structure the paper's Fig. 3 block decomposition describes.
+
+Single-token decode keeps the state (plus a depthwise-conv tail) in the
+serving cache and does the O(1) recurrence.
+
+Used by both mamba2-2.7b (pure SSM) and jamba (hybrid 1:7 attn:mamba —
+jamba-v0.1 uses mamba1; we adapt to the SSD form per DESIGN.md hardware
+notes: SSD is the TPU-friendly member of the family, MXU-dominated).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Boxed, dense_init, zeros_init, ones_init, _dtype, rms_norm
+
+
+def init_mamba(key, cfg) -> Dict:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    H = cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    N = cfg.ssm_state
+    G = cfg.ssm_groups
+    dt = _dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    conv_dim = di + 2 * G * N
+    return {
+        # order: [z | x | B | C | dt]
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * G * N + H),
+                              ("embed", "ssm_inner"), dt),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, conv_dim),
+                             (None, "ssm_inner"), dt, scale=0.5),
+        "conv_b": zeros_init((conv_dim,), ("ssm_inner",), dt),
+        "A_log": Boxed(jnp.log(jnp.linspace(1.0, 16.0, H)), ("ssm_heads",)),
+        "D": ones_init((H,), ("ssm_heads",), jnp.float32),
+        "dt_bias": Boxed(
+            jnp.log(jnp.expm1(jnp.exp(jax.random.uniform(
+                ks[2], (H,), minval=math.log(1e-3), maxval=math.log(1e-1))))),
+            ("ssm_heads",)),
+        "norm": ones_init((di,), ("ssm_inner",), dt),
+        "out_proj": dense_init(ks[3], (di, d), ("ssm_inner", "embed"), dt),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    di = cfg.ssm_expand * cfg.d_model
+    G, N, H = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    x = zxbcdt[..., di:2 * di]
+    Bv = zxbcdt[..., 2 * di:2 * di + G * N]
+    Cv = zxbcdt[..., 2 * di + G * N:2 * di + 2 * G * N]
+    dtv = zxbcdt[..., 2 * di + 2 * G * N:]
+    return z, x, Bv, Cv, dtv
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 tail: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Depthwise causal conv1d. xbc: [B,S,C]; w: [K,C]. ``tail``: [B,K-1,C]
+    carry-in for decode continuity."""
+    K = w.shape[0]
+    if tail is None:
+        pad = jnp.zeros((xbc.shape[0], K - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = tail.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)          # [B, S+K-1, C]
+    out = sum(xp[:, i:i + xbc.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def apply_mamba(p: Dict, x_in: jnp.ndarray, cfg, chunk: int = 64
+                ) -> jnp.ndarray:
+    """Training/prefill path. x_in: [B, S, d] -> [B, S, d]."""
+    Bb, S, d = x_in.shape
+    di = cfg.ssm_expand * d
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+
+    zxbcdt = x_in @ p["in_proj"]
+    z, xs, Bv, Cv, dtv = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([xs, Bv, Cv], axis=-1)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs, Bv, Cv = (xbc[..., :di], xbc[..., di:di + G * N],
+                  xbc[..., di + G * N:])
+
+    Xh = xs.reshape(Bb, S, H, P)
+    Bg = Bv.reshape(Bb, S, G, N)
+    Cg = Cv.reshape(Bb, S, G, N)
+    rep = H // G
+    Bh = jnp.repeat(Bg, rep, axis=2)                  # [B,S,H,N]
+    Ch = jnp.repeat(Cg, rep, axis=2)
+
+    dt_ = jax.nn.softplus(dtv.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+    A = -jnp.exp(p["A_log"])                          # [H]
+    dA = dt_ * A                                      # [B,S,H] log-decay
+
+    y = _ssd_chunked(Xh.astype(jnp.float32), Bh.astype(jnp.float32),
+                     Ch.astype(jnp.float32), dt_, dA, chunk)
+    y = y + Xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(Bb, S, di)
+    y = rms_norm(y.astype(x_in.dtype) * jax.nn.silu(z), p["norm"],
+                 cfg.norm_eps)
+    return y @ p["out_proj"]
+
+
+def _ssd_chunked(X, B_, C_, dt_, dA, Q: int):
+    """X:[B,S,H,P] B_,C_:[B,S,H,N] dt_,dA:[B,S,H] -> Y:[B,S,H,P] (f32)."""
+    Bb, S, H, P = X.shape
+    N = B_.shape[-1]
+    if S % Q:
+        pad = Q - S % Q
+        X = jnp.pad(X, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt_ = jnp.pad(dt_, ((0, 0), (0, pad), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+    Sp = X.shape[1]
+    nc = Sp // Q
+
+    def resh(t):
+        return t.reshape((Bb, nc, Q) + t.shape[2:]).swapaxes(0, 1)
+
+    Xc, Bc, Cc = resh(X), resh(B_), resh(C_)          # [nc,B,Q,H,*]
+    dtc, dAc = resh(dt_), resh(dA)                    # [nc,B,Q,H]
+
+    def step(h, blk):
+        Xq, Bq, Cq, dtq, dAq = blk
+        a = jnp.cumsum(dAq, axis=1)                   # [B,Q,H]
+        a_last = a[:, -1:, :]                         # [B,1,H]
+        # intra-chunk quadratic (the "dual" form, MXU matmuls)
+        scores = jnp.einsum("bqhn,bkhn->bhqk", Cq, Bq)
+        decay = jnp.exp(a[:, :, None, :] - a[:, None, :, :])  # [B,Q,K,H]
+        qi = jnp.arange(Q)
+        causal = (qi[:, None] >= qi[None, :])[None, :, :, None]
+        L = jnp.where(causal, decay, 0.0).transpose(0, 3, 1, 2)  # [B,H,Q,K]
+        dt_k = dtq.transpose(0, 2, 1)[:, :, None, :]             # [B,H,1,K]
+        M = scores * L * dt_k
+        y_intra = jnp.einsum("bhqk,bkhp->bqhp", M, Xq)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("bqhn,bhpn->bqhp", Cq,
+                             h) * jnp.exp(a)[..., None]
+        # state update
+        w = jnp.exp(a_last - a) * dtq                 # [B,Q,H]
+        h_new = h * jnp.exp(a_last).transpose(0, 2, 1)[..., None] + \
+            jnp.einsum("bqhp,bqhn,bqh->bhpn", Xq, Bq, w)
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((Bb, H, P, N), jnp.float32)
+    _, Yc = jax.lax.scan(step, h0, (Xc, Bc, Cc, dtc, dAc))
+    Y = Yc.swapaxes(0, 1).reshape(Bb, Sp, H, P)
+    return Y[:, :S]
+
+
+def apply_mamba_decode(p: Dict, x_in: jnp.ndarray, state: Dict, cfg
+                       ) -> Tuple[jnp.ndarray, Dict]:
+    """One-token recurrence. x_in: [B, 1, d]; state: {"h": [B,H,P,N],
+    "conv": [B,K-1,conv_dim]} -> (y [B,1,d], new state)."""
+    Bb, _, d = x_in.shape
+    di = cfg.ssm_expand * d
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    K = cfg.ssm_conv
+
+    zxbcdt = x_in @ p["in_proj"]
+    z, xs, Bv, Cv, dtv = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([xs, Bv, Cv], axis=-1)      # [B,1,conv_dim]
+    conv_in = jnp.concatenate([state["conv"], xbc], axis=1)  # [B,K,convd]
+    out = sum(conv_in[:, i, :] * p["conv_w"][i] for i in range(K))
+    xbc1 = jax.nn.silu(out + p["conv_b"])[:, None, :]
+    new_conv = conv_in[:, 1:, :]
+
+    xs, Bv, Cv = (xbc1[..., :di], xbc1[..., di:di + G * N],
+                  xbc1[..., di + G * N:])
+    Xh = xs.reshape(Bb, H, P).astype(jnp.float32)
+    rep = H // G
+    Bh = jnp.repeat(Bv.reshape(Bb, G, N), rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cv.reshape(Bb, G, N), rep, axis=1).astype(jnp.float32)
+    dt_ = jax.nn.softplus(dtv[:, 0, :].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt_ * A)                          # [B,H]
+
+    h = state["h"] * decay[..., None, None] + \
+        jnp.einsum("bhp,bhn,bh->bhpn", Xh, Bh, dt_)
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, h)
+    y = y + Xh * p["D"][None, :, None]
+    y = y.reshape(Bb, 1, di)
+    y = rms_norm(y.astype(x_in.dtype) * jax.nn.silu(z), p["norm"],
+                 cfg.norm_eps)
+    return y @ p["out_proj"], {"h": h, "conv": new_conv}
+
+
+def init_mamba_state(cfg, batch: int, dtype=jnp.float32) -> Dict:
+    di = cfg.ssm_expand * cfg.d_model
+    conv_dim = di + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "h": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                        cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+    }

@@ -1,0 +1,5 @@
+"""Serving: batched KV-cache decode on top of models.decode_step."""
+
+from .decode import make_serve_step, make_prefill_step, greedy_generate
+
+__all__ = ["make_serve_step", "make_prefill_step", "greedy_generate"]

@@ -1,0 +1,66 @@
+"""Batched serving: prefill + decode step factories (pure, pjit-ready).
+
+``serve_step`` is what the dry-run lowers for the ``decode_*`` /
+``long_500k`` cells: one new token for the whole batch against a
+pre-allocated cache of ``seq_len`` (KV rings for attention layers, O(1)
+SSD state for mamba layers — the long_500k cells exist precisely because
+the SSM/hybrid archs keep this constant-size).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import apply_lm, decode_step, init_cache
+from repro.models.config import ModelConfig
+
+
+def make_serve_step(cfg: ModelConfig, sample: str = "greedy",
+                    temperature: float = 1.0,
+                    unroll: bool = False) -> Callable:
+    def serve_step(params, cache, tokens, rng=None):
+        logits, cache = decode_step(cfg, params, cache, tokens,
+                                    unroll=unroll)
+        if sample == "greedy":
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1)
+        else:
+            nxt = jax.random.categorical(rng, logits[:, -1, :] / temperature)
+        return nxt.astype(jnp.int32)[:, None], cache, logits
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, unroll: bool = False) -> Callable:
+    """Prefill: run the full prompt, return last-position logits.
+    (Cache writing during prefill is decode-loop based for attention archs
+    at test scale; production prefill uses the parallel path + cache scatter
+    — the dry-run prefill cells lower the parallel path.)"""
+    def prefill(params, tokens, extra_embeds=None):
+        logits, _ = apply_lm(cfg, params, tokens, extra_embeds=extra_embeds,
+                             remat=False, unroll=unroll)
+        return logits
+    return prefill
+
+
+def greedy_generate(cfg: ModelConfig, params, prompt: jnp.ndarray,
+                    steps: int, max_len: Optional[int] = None,
+                    extra_embeds=None) -> jnp.ndarray:
+    """Host loop: feed prompt token-by-token, then generate ``steps`` more.
+    Returns [B, steps] generated ids.  Test/demo scale."""
+    from repro.models import prefill_cross
+    B, P = prompt.shape
+    max_len = max_len or (P + steps)
+    cache = init_cache(cfg, B, max_len)
+    if cfg.family == "encdec":
+        cache = prefill_cross(cfg, params, cache, extra_embeds)
+    step = jax.jit(make_serve_step(cfg))
+    tok = None
+    for t in range(P):
+        tok, cache, _ = step(params, cache, prompt[:, t:t + 1])
+    out = []
+    for _ in range(steps):
+        out.append(tok)
+        tok, cache, _ = step(params, cache, tok)
+    return jnp.concatenate(out, axis=1)

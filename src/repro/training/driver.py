@@ -1,0 +1,115 @@
+"""Fault-tolerant training driver.
+
+Production-shaped loop: deterministic data (restart-exact), checkpoint
+every N steps with atomic publish, automatic resume from LATEST, a
+straggler watchdog (step-time EMA; slow steps fire a callback that a fleet
+controller would use to evict/replace the slow host), and a failure
+injector used by tests to prove restart-exactness.
+
+On a real fleet this process runs per host under `jax.distributed`
+(launch/train.py wires that); everything here is host-count agnostic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.data import BatchPipeline
+from .optimizer import AdamW
+from .step import make_train_step
+
+
+@dataclasses.dataclass
+class StragglerWatchdog:
+    """Flags steps slower than ``threshold`` x EMA(step_time).
+
+    The paper-scale deployment story: the controller collects these events
+    over all hosts; a host that flags persistently gets drained and its
+    data-parallel shard re-assigned (elastic re-mesh,
+    distributed/elastic.py).  Here we implement detection + callback.
+    """
+    threshold: float = 3.0
+    alpha: float = 0.1
+    on_straggler: Optional[Callable[[int, float, float], None]] = None
+    _ema: float = 0.0
+    events: int = 0
+
+    def observe(self, step: int, dt: float) -> bool:
+        if self._ema == 0.0:
+            self._ema = dt
+            return False
+        slow = dt > self.threshold * self._ema
+        if slow:
+            self.events += 1
+            if self.on_straggler:
+                self.on_straggler(step, dt, self._ema)
+        # EMA excludes outliers so one hiccup doesn't mask the next
+        if not slow:
+            self._ema = (1 - self.alpha) * self._ema + self.alpha * dt
+        return slow
+
+
+class FailureInjector:
+    """Deterministic crash at a given step (tests restart-exactness)."""
+
+    def __init__(self, at_step: Optional[int] = None):
+        self.at_step = at_step
+        self.fired = False
+
+    def maybe_fail(self, step: int) -> None:
+        if self.at_step is not None and step == self.at_step and not self.fired:
+            self.fired = True
+            raise RuntimeError(f"injected failure at step {step}")
+
+
+def train(cfg, params, opt: AdamW, pipeline: BatchPipeline, *,
+          steps: int, ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
+          train_step: Optional[Callable] = None,
+          watchdog: Optional[StragglerWatchdog] = None,
+          injector: Optional[FailureInjector] = None,
+          log_every: int = 10,
+          log: Callable[[str], None] = print) -> Dict[str, Any]:
+    """Run (or resume) a training job.  Returns final state + history."""
+    step_fn = train_step or jax.jit(make_train_step(cfg, opt),
+                                    donate_argnums=(0, 1))
+    opt_state = opt.init(params)
+    start_step = 0
+    mgr = CheckpointManager(ckpt_dir, every=ckpt_every) if ckpt_dir else None
+
+    if mgr is not None:
+        restored = mgr.restore_or_none({"params": params,
+                                        "opt": opt_state})
+        if restored is not None:
+            tree, ck_step, extra = restored
+            params, opt_state = tree["params"], tree["opt"]
+            start_step = ck_step
+            log(f"[driver] resumed from checkpoint step {ck_step}")
+
+    history = []
+    watchdog = watchdog or StragglerWatchdog()
+    for step in range(start_step, steps):
+        if injector is not None:
+            injector.maybe_fail(step)
+        x, y = pipeline.batch_at(step)
+        batch = {"tokens": jax.numpy.asarray(x),
+                 "labels": jax.numpy.asarray(y)}
+        t0 = time.perf_counter()
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])   # blocks; also the step boundary
+        dt = time.perf_counter() - t0
+        watchdog.observe(step, dt)
+        history.append(loss)
+        if step % log_every == 0:
+            log(f"[driver] step {step} loss {loss:.4f} "
+                f"({dt*1e3:.0f} ms/step)")
+        if mgr is not None:
+            mgr.maybe_save(step + 1, {"params": params, "opt": opt_state},
+                           extra={"pipeline_step": step + 1})
+    return {"params": params, "opt_state": opt_state, "history": history,
+            "straggler_events": watchdog.events, "last_step": steps}

@@ -1,0 +1,90 @@
+"""AdamW + gradient clipping in pure JAX (no optax in this environment).
+
+Moments are float32 regardless of param dtype (bf16 training standard).
+The optimizer state pytree mirrors the param tree, so the same sharding
+rules apply (FSDP shards moments exactly like params — DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    count: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 0
+    schedule: str = "constant"       # constant | cosine
+    total_steps: int = 0
+
+    def init(self, params) -> AdamWState:
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(
+            count=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(f32, params),
+            nu=jax.tree.map(f32, params),
+        )
+
+    def _lr_at(self, step: jnp.ndarray) -> jnp.ndarray:
+        lr = jnp.float32(self.lr)
+        if self.warmup_steps:
+            lr = lr * jnp.minimum(1.0, (step + 1) / self.warmup_steps)
+        if self.schedule == "cosine" and self.total_steps:
+            frac = jnp.clip((step - self.warmup_steps) /
+                            max(self.total_steps - self.warmup_steps, 1),
+                            0.0, 1.0)
+            lr = lr * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return lr
+
+    def update(self, grads, state: AdamWState, params
+               ) -> Tuple[Any, AdamWState, dict]:
+        # global-norm clip (f32 accumulation)
+        leaves = jax.tree.leaves(grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in leaves))
+        scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9)) \
+            if self.clip_norm else jnp.float32(1.0)
+
+        step = state.count
+        lr = self._lr_at(step)
+        b1, b2 = self.b1, self.b2
+        c1 = 1.0 - b1 ** (step.astype(jnp.float32) + 1)
+        c2 = 1.0 - b2 ** (step.astype(jnp.float32) + 1)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mhat = m / c1
+            vhat = v / c2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay:
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * delta
+            return new_p.astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+        new_nu = jax.tree.map(lambda t: t[2], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+        return (new_params,
+                AdamWState(count=step + 1, mu=new_mu, nu=new_nu),
+                {"grad_norm": gnorm, "lr": lr})

@@ -1,0 +1,104 @@
+"""Loss + train/eval step factories (pure functions for pjit).
+
+``make_train_step`` builds the function the launcher jits with
+in/out_shardings.  Microbatch gradient accumulation is a ``lax.scan`` over
+the leading batch split — compute per microbatch overlaps XLA's gradient
+reduce-scatter of the previous one (latency hiding comes from XLA's async
+collectives; the schedule is what we control here).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import apply_lm
+from repro.models.config import ModelConfig
+from .optimizer import AdamW, AdamWState
+
+Z_LOSS = 1e-4
+MOE_AUX = 1e-2
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mean CE over valid tokens + z-loss.  logits f32 [B,S,V].
+
+    The gold logit is extracted with a one-hot contraction, NOT
+    take_along_axis: with the vocab dim sharded over the model axis
+    (DESIGN.md §4), a gather would all-gather the full logits
+    (B*S*V*4 bytes of collective traffic); the one-hot product reduces
+    shard-locally and psums a [B,S] scalar field instead."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    nll = lse - gold
+    z = jnp.square(lse)
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return (nll * mask).sum() / denom, (z * mask).sum() / denom
+
+
+def make_loss_fn(cfg: ModelConfig, remat: bool = True,
+                 unroll: bool = False) -> Callable:
+    def loss_fn(params, batch: Dict) -> Tuple[jnp.ndarray, Dict]:
+        logits, aux = apply_lm(cfg, params, batch["tokens"],
+                               extra_embeds=batch.get("extra_embeds"),
+                               remat=remat, unroll=unroll)
+        labels = batch["labels"]
+        if cfg.family == "vlm" and "extra_embeds" in batch:
+            # patches occupy the prefix; loss on text positions only
+            logits = logits[:, -labels.shape[1]:, :]
+        ce, z = cross_entropy(logits, labels)
+        loss = ce + Z_LOSS * z + MOE_AUX * aux
+        return loss, {"ce": ce, "z": z, "moe_aux": aux}
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamW, remat: bool = True,
+                    microbatches: int = 1, unroll: bool = False) -> Callable:
+    loss_fn = make_loss_fn(cfg, remat=remat, unroll=unroll)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state: AdamWState, batch: Dict):
+        if microbatches > 1:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc(carry, mb_batch):
+                gsum, lsum = carry
+                (loss, m), g = grad_fn(params, mb_batch)
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                return (gsum, lsum + loss), m
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (gsum, lsum), ms = jax.lax.scan(acc, (g0, jnp.float32(0)), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+            metrics = jax.tree.map(lambda x: x.mean(), ms)
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+
+        params, opt_state, opt_m = opt.update(grads, opt_state, params)
+        metrics = dict(metrics, loss=loss, **opt_m)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig) -> Callable:
+    loss_fn = make_loss_fn(cfg, remat=False)
+
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(params, batch)
+        return dict(metrics, loss=loss)
+
+    return eval_step

@@ -1,0 +1,1 @@
+from . import hlo_analysis  # noqa: F401

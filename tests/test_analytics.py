@@ -1,0 +1,85 @@
+"""The six TADOC analytics vs direct (decompressed) oracles (+property)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (compress_files, flatten, word_count, sort_words,
+                        term_vector, inverted_index, ranked_inverted_index,
+                        sequence_count, term_vector_sparse)
+from conftest import make_repetitive_files
+
+
+def _build(rng, vocab=None, n_files=None):
+    vocab = vocab or int(rng.integers(5, 30))
+    files = make_repetitive_files(rng, vocab,
+                                  n_files=n_files or int(rng.integers(1, 6)))
+    g, nf = compress_files(files, vocab)
+    return flatten(g, vocab, nf), files, vocab
+
+
+def test_word_count_and_sort(rng):
+    ga, files, V = _build(rng)
+    oracle = np.bincount(np.concatenate(files), minlength=V)
+    wc = np.asarray(word_count(ga))
+    assert np.allclose(wc, oracle)
+    wc_pallas = np.asarray(word_count(ga, backend="pallas"))
+    assert np.allclose(wc_pallas, oracle)
+    order, cnts = sort_words(ga)
+    assert np.allclose(np.asarray(cnts), np.sort(oracle)[::-1])
+    assert np.allclose(oracle[np.asarray(order)], np.asarray(cnts))
+
+
+def test_term_vector_and_indexes(rng):
+    ga, files, V = _build(rng)
+    oracle = np.stack([np.bincount(f, minlength=V) for f in files])
+    tv = np.asarray(term_vector(ga))
+    assert np.allclose(tv, oracle)
+    ii = np.asarray(inverted_index(ga))
+    assert (ii == (oracle > 0)).all()
+    rank, rcnt = ranked_inverted_index(ga)
+    rank, rcnt = np.asarray(rank), np.asarray(rcnt)
+    for v in range(V):
+        assert np.allclose(rcnt[v], oracle[rank[v], v])
+        assert (np.diff(rcnt[v]) <= 1e-6).all()      # descending
+
+
+def test_term_vector_sparse_path(rng):
+    ga, files, V = _build(rng)
+    oracle = np.stack([np.bincount(f, minlength=V) for f in files])
+    ff, ww, cc = term_vector_sparse(ga)
+    sp = np.zeros((len(files), V))
+    if len(ff):
+        np.add.at(sp, (ff, ww), cc)
+    assert np.allclose(sp, oracle)
+
+
+def _oracle_ngrams(files, l):
+    from collections import Counter
+    c = Counter()
+    for f in files:
+        for i in range(len(f) - l + 1):
+            c[tuple(int(x) for x in f[i:i + l])] += 1
+    return {k: float(v) for k, v in c.items()}
+
+
+def test_sequence_count_l2_l3_l5(rng):
+    ga, files, V = _build(rng)
+    for l in (2, 3, 5):
+        grams, cnt = sequence_count(ga, l=l)
+        got = {tuple(int(x) for x in grams[i]): float(cnt[i])
+               for i in range(len(cnt))}
+        assert got == _oracle_ngrams(files, l), f"l={l}"
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 100_000))
+def test_property_all_apps(seed):
+    rng = np.random.default_rng(seed)
+    ga, files, V = _build(rng)
+    oracle_tv = np.stack([np.bincount(f, minlength=V) for f in files])
+    assert np.allclose(np.asarray(word_count(ga)), oracle_tv.sum(0))
+    assert np.allclose(np.asarray(term_vector(ga)), oracle_tv)
+    grams, cnt = sequence_count(ga, l=3)
+    got = {tuple(int(x) for x in grams[i]): float(cnt[i])
+           for i in range(len(cnt))}
+    assert got == _oracle_ngrams(files, 3)

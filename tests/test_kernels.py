@@ -1,0 +1,101 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.bincount import weighted_bincount_pallas
+from repro.kernels.propagate import ell_row_sums_pallas
+
+
+@pytest.mark.parametrize("n,v", [(64, 8), (513, 129), (1000, 777),
+                                 (5000, 2000), (4096, 512), (100_000, 30_000)])
+def test_bincount_shapes(n, v, rng):
+    ids = jnp.asarray(rng.integers(0, v, n).astype(np.int32))
+    vals = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    got = ops.weighted_bincount(ids, vals, v)
+    want = ref.weighted_bincount_ref(ids, vals, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("tn,bv", [(128, 128), (512, 512), (256, 1024)])
+def test_bincount_block_shapes(tn, bv, rng):
+    ids = jnp.asarray(rng.integers(0, 300, 1500).astype(np.int32))
+    vals = jnp.asarray(rng.normal(size=1500).astype(np.float32))
+    got = weighted_bincount_pallas(ids, vals, 300, tn=tn, bv=bv)
+    want = ref.weighted_bincount_ref(ids, vals, 300)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_bincount_negative_ids_ignored(rng):
+    ids = jnp.asarray(np.array([-1, 0, 1, -1, 1] * 40, np.int32))
+    vals = jnp.ones(200, jnp.float32)
+    got = np.asarray(ops.weighted_bincount(ids, vals, 4))
+    assert got[0] == 40 and got[1] == 80 and got[2] == 0
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.int32])
+def test_bincount_val_dtypes(dtype, rng):
+    ids = jnp.asarray(rng.integers(0, 50, 600).astype(np.int32))
+    vals = jnp.asarray(rng.integers(0, 5, 600).astype(dtype))
+    got = ops.weighted_bincount(ids, vals, 50)
+    want = ref.weighted_bincount_ref(ids, vals.astype(jnp.float32), 50)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@pytest.mark.parametrize("rows,w,R", [(64, 1, 10), (100, 4, 50),
+                                      (1000, 16, 333), (5000, 8, 4000),
+                                      (257, 3, 129)])
+def test_ell_row_sums_shapes(rows, w, R, rng):
+    src = jnp.asarray(rng.integers(0, R, (rows, w)).astype(np.int32))
+    freq = jnp.asarray(rng.integers(0, 5, (rows, w)).astype(np.float32))
+    wts = jnp.asarray(rng.normal(size=R).astype(np.float32))
+    got = ops.ell_row_sums(wts, src, freq)
+    want = ref.ell_row_sums_ref(wts, src, freq)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("br", [8, 64, 256])
+def test_ell_block_shapes(br, rng):
+    src = jnp.asarray(rng.integers(0, 77, (300, 5)).astype(np.int32))
+    freq = jnp.asarray(rng.integers(0, 3, (300, 5)).astype(np.float32))
+    wts = jnp.asarray(rng.normal(size=77).astype(np.float32))
+    got = ell_row_sums_pallas(wts, src, freq, br=br)
+    want = ref.ell_row_sums_ref(wts, src, freq)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_ell_propagate_end_to_end(rng):
+    R = 120
+    src = jnp.asarray(rng.integers(0, R, (200, 4)).astype(np.int32))
+    freq = jnp.asarray(rng.integers(0, 4, (200, 4)).astype(np.float32))
+    dst = jnp.asarray(rng.integers(0, R, 200).astype(np.int32))
+    wts = jnp.asarray(rng.normal(size=R).astype(np.float32))
+    got = np.asarray(ops.ell_propagate(wts, src, freq, dst, R))
+    sums = np.asarray(ref.ell_row_sums_ref(wts, src, freq))
+    want = np.zeros(R)
+    np.add.at(want, np.asarray(dst), sums)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_property_bincount(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(64, 2000))
+    v = int(rng.integers(8, 500))
+    ids = jnp.asarray(rng.integers(0, v, n).astype(np.int32))
+    vals = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    got = np.asarray(ops.weighted_bincount(ids, vals, v))
+    want = np.zeros(v, np.float32)
+    np.add.at(want, np.asarray(ids), np.asarray(vals))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+    # conservation: total mass preserved
+    np.testing.assert_allclose(got.sum(), float(vals.sum()), rtol=1e-4,
+                               atol=1e-3)

@@ -1,0 +1,78 @@
+"""Memory-pool planning (paper §IV-C, Eq. 1) + traversal strategy selector."""
+
+import numpy as np
+
+from repro.core import (compress_files, flatten, head_tail_upper_limit,
+                        stream_upper_limit, plan_local_tables, plan_streams,
+                        bottom_up_tables, select_direction, estimate_costs)
+from repro.core.sequence import plan_stream
+from conftest import make_repetitive_files
+
+
+def _build(seed=0, vocab=15, n_files=3):
+    rng = np.random.default_rng(seed)
+    files = make_repetitive_files(rng, vocab, n_files=n_files)
+    g, nf = compress_files(files, vocab)
+    return flatten(g, vocab, nf)
+
+
+def test_stream_bound_dominates_actual_stream():
+    ga = _build()
+    for l in (2, 3, 4):
+        sp = plan_stream(ga, l)
+        per_rule = np.bincount(
+            # stream positions per rule: recompute ownership from windows
+            np.repeat(np.arange(ga.num_rules),
+                      [len(ga.rule_body(r)) for r in range(ga.num_rules)]))
+        bound = stream_upper_limit(ga, l)
+        # total stream length bounded
+        assert sp.st_kind.shape[0] <= bound.sum()
+
+
+def test_paper_equation1_formula():
+    ga = _build()
+    l = 3
+    ul = head_tail_upper_limit(ga, l)
+    # Equation 1: wordSize + (l-1)*subRuleSize - (l-1)
+    for r in (0, min(1, ga.num_rules - 1)):
+        b = ga.rule_body(r)
+        words = int((b < ga.num_terminals).sum())
+        subs = int((b >= ga.num_terminals).sum())
+        assert ul[r] == words + (l - 1) * subs - (l - 1)
+
+
+def test_arena_plans_are_disjoint_and_sized():
+    ga = _build()
+    plan = plan_local_tables(ga)
+    assert plan.total == int(plan.sizes.sum())
+    ends = plan.offsets + plan.sizes
+    assert (plan.offsets[1:] == ends[:-1]).all()     # contiguous, disjoint
+    # bound >= true local table size
+    C, _ = bottom_up_tables(ga)
+    actual = (np.asarray(C) > 0).sum(axis=1)
+    assert (plan.sizes >= np.minimum(actual, ga.vocab_size) - 1e-6).all()
+
+
+def test_stream_arena():
+    ga = _build()
+    plan = plan_streams(ga, 3)
+    assert plan.total >= plan_stream(ga, 3).st_kind.shape[0]
+
+
+def test_selector_many_files_prefers_bottom_up():
+    # dataset-A-like: many small files -> top-down payload (width F) explodes
+    rng = np.random.default_rng(1)
+    files = [rng.integers(0, 40, 30) for _ in range(64)]
+    g, nf = compress_files(files, 40)
+    ga = flatten(g, 40, nf)
+    assert select_direction(ga) == "bottom_up"
+
+
+def test_selector_few_files_prefers_top_down():
+    # dataset-B-like: few large files
+    rng = np.random.default_rng(2)
+    files = [np.tile(rng.integers(0, 500, 200), 10) for _ in range(2)]
+    g, nf = compress_files(files, 500)
+    ga = flatten(g, 500, nf)
+    costs = estimate_costs(ga)
+    assert select_direction(ga) == "top_down", costs

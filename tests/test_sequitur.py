@@ -1,0 +1,73 @@
+"""Sequitur grammar inference: losslessness + invariants (+property)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compress, compress_files
+from conftest import make_repetitive_files
+
+
+def _check_utility(g):
+    refs = {i: 0 for i in range(1, g.num_rules)}
+    for r in g.rules:
+        for s in r:
+            if s >= g.num_terminals:
+                refs[int(s) - g.num_terminals] += 1
+    for i, c in refs.items():
+        assert c >= 2, f"rule {i} referenced {c} < 2 times"
+
+
+def test_roundtrip_simple():
+    toks = np.array([1, 2, 3, 1, 2, 3, 1, 2, 3, 4], np.int64)
+    g = compress(toks, 5)
+    assert (g.expand() == toks).all()
+    _check_utility(g)
+
+
+def test_compresses_repetition():
+    t = np.tile(np.arange(50), 50)
+    g = compress(t, 50)
+    assert (g.expand() == t).all()
+    assert sum(len(r) for r in g.rules) < len(t) / 5
+
+
+def test_rejects_out_of_range():
+    with pytest.raises(ValueError):
+        compress([7], 5)
+
+
+def test_multifile_splitters_never_inside_rules():
+    rng = np.random.default_rng(3)
+    files = make_repetitive_files(rng, vocab=12, n_files=4)
+    g, nf = compress_files(files, 12)
+    assert nf == 4
+    # splitters (>= vocab, < num_terminals) appear only in the root
+    for rid in range(1, g.num_rules):
+        b = g.rules[rid]
+        assert not (((b >= 12) & (b < 12 + nf)).any()), rid
+    expected = np.concatenate(
+        [np.concatenate([f, [12 + i]]) for i, f in enumerate(files)])
+    assert (g.expand() == expected).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 7), min_size=1, max_size=300),
+       st.integers(0, 1_000_000))
+def test_property_lossless_and_utility(tokens, _salt):
+    t = np.array(tokens, np.int64)
+    g = compress(t, 8)
+    assert (g.expand() == t).all()
+    _check_utility(g)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_property_nested_repetition(seed):
+    rng = np.random.default_rng(seed)
+    files = make_repetitive_files(rng, vocab=int(rng.integers(3, 15)))
+    g, nf = compress_files(files, int(max(np.concatenate(files))) + 1)
+    exp = g.expand()
+    got = exp[exp < g.num_terminals - nf]
+    assert (got == np.concatenate(files)).all()
+    _check_utility(g)

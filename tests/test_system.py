@@ -1,0 +1,69 @@
+"""End-to-end system behaviour: the paper's pipeline + the LM stack on top.
+
+corpus -> Sequitur compression -> analytics WITHOUT decompression
+       -> vocab from compressed-domain counts -> batches via random access
+       -> train an LM -> generate.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import sequence_count, sort_words, word_count
+from repro.data import BatchPipeline, CompressedCorpus, Tokenizer, synthetic
+from repro.models import init_lm, reduced, unbox
+from repro.serving import greedy_generate
+from repro.training import AdamW, train
+
+
+def test_end_to_end_compressed_training():
+    # 1. corpus, compressed at rest
+    files = synthetic.make_table2_corpus("D")
+    cc = CompressedCorpus.build(files, vocab_size=400)
+    stats = cc.stats()
+    assert stats["compression_ratio"] > 1.2
+
+    # 2. analytics directly on compression == direct analytics
+    direct = np.bincount(np.concatenate(files), minlength=400)
+    assert np.allclose(np.asarray(word_count(cc.ga)), direct)
+    order, cnts = sort_words(cc.ga)
+    assert np.allclose(np.asarray(cnts), np.sort(direct)[::-1])
+
+    # 3. vocabulary induced from compressed-domain counts
+    words = [f"w{i}" for i in range(400)]
+    tok = Tokenizer.from_tadoc_counts(words, np.asarray(word_count(cc.ga)))
+    assert tok.vocab_size <= 401
+
+    # 4. batches by random-access expansion; train a tiny LM
+    cfg = reduced(get_config("qwen2_05b"), dtype="float32", num_layers=2,
+                  d_model=32, d_ff=64, vocab_size=400)
+    params, _ = unbox(init_lm(jax.random.PRNGKey(0), cfg))
+    pl = BatchPipeline(cc, global_batch=4, seq_len=16, seed=0, prefetch=0)
+    out = train(cfg, params, AdamW(lr=1e-2, warmup_steps=2), pl, steps=8,
+                log_every=100, log=lambda s: None)
+    assert out["history"][-1] < out["history"][0]
+
+    # 5. serve a few tokens from the trained model
+    prompt = jnp.asarray(pl.batch_at(0)[0][:2, :8])
+    gen = greedy_generate(cfg, out["params"], prompt, steps=4)
+    assert gen.shape == (2, 4)
+    assert int(gen.max()) < cfg.vocab_size
+
+
+def test_ngram_statistics_for_curation():
+    """The data-curation path: corpus-wide 3-gram stats without
+    decompression (what dedup/quality filters consume)."""
+    files = synthetic.make_table2_corpus("D")
+    cc = CompressedCorpus.build(files, vocab_size=400)
+    grams, cnt = sequence_count(cc.ga, l=3)
+    from collections import Counter
+    oracle = Counter()
+    for f in files:
+        for i in range(len(f) - 2):
+            oracle[tuple(int(x) for x in f[i:i + 3])] += 1
+    got = {tuple(int(x) for x in grams[i]): float(cnt[i])
+           for i in range(len(cnt))}
+    assert got == {k: float(v) for k, v in oracle.items()}
+    # repeated phrases produce high-count n-grams (the compression signal)
+    assert max(got.values()) >= 5

@@ -1,0 +1,69 @@
+"""DAG traversal engines: frontier == leveled == pallas-ELL == oracle."""
+
+import numpy as np
+import pytest
+
+from repro.core import (compress_files, flatten, top_down_weights,
+                        per_file_weights, bottom_up_tables, bottom_up_bounds,
+                        traversal_rounds)
+from conftest import make_repetitive_files
+
+
+@pytest.fixture(params=[0, 1, 2])
+def ga(request):
+    rng = np.random.default_rng(request.param)
+    vocab = int(rng.integers(8, 25))
+    files = make_repetitive_files(rng, vocab, n_files=int(rng.integers(1, 5)))
+    g, nf = compress_files(files, vocab)
+    return flatten(g, vocab, nf), files, g
+
+
+def _oracle_weights(ga):
+    occ = np.zeros(ga.num_rules)
+    occ[0] = 1
+    for lv in range(ga.num_levels):
+        for r in np.where(ga.level == lv)[0]:
+            b = ga.rule_body(r)
+            subs = b[b >= ga.num_terminals] - ga.num_terminals
+            u, c = np.unique(subs, return_counts=True)
+            for uu, cc in zip(u, c):
+                occ[uu] += cc * occ[r]
+    return occ
+
+
+def test_engines_agree(ga):
+    ga, files, g = ga
+    oracle = _oracle_weights(ga)
+    for method in ("frontier", "leveled", "frontier_ell"):
+        w = np.asarray(top_down_weights(ga, method))
+        assert np.allclose(w, oracle), method
+
+
+def test_rounds_equal_dag_depth(ga):
+    ga, _, _ = ga
+    assert traversal_rounds(ga) == ga.num_levels
+
+
+def test_bottom_up_matches_top_down(ga):
+    ga, files, g = ga
+    full = g.expand()
+    words = full[full < ga.vocab_size]
+    oracle = np.bincount(words, minlength=ga.vocab_size)
+    _, result = bottom_up_tables(ga)
+    assert np.allclose(np.asarray(result), oracle)
+
+
+def test_bounds_dominate_actual(ga):
+    ga, _, _ = ga
+    C, _ = bottom_up_tables(ga)
+    actual = (np.asarray(C) > 0).sum(axis=1)
+    bounds = np.asarray(bottom_up_bounds(ga))
+    assert (bounds >= actual - 1e-6).all()
+
+
+def test_per_file_weights_sum_to_global(ga):
+    ga, _, _ = ga
+    Wf = np.asarray(per_file_weights(ga))
+    w = np.asarray(top_down_weights(ga))
+    # per-file weights sum over files to the global weights (excluding root)
+    assert np.allclose(Wf.sum(axis=1)[1:], w[1:])
