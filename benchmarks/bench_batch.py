@@ -1,0 +1,82 @@
+"""Batched multi-corpus engine vs sequential per-corpus loop.
+
+Emits ``batch/<app>/<mode>`` rows (us per full sweep over the batch) plus a
+``batch/<app>/speedup`` row.  The sequential mode is the pre-batching
+serving story: one jitted call per corpus (each with its own shapes, its
+own dispatch).  The batched mode packs all corpora into one
+:class:`GrammarBatch` and runs ONE program.  Steady-state timing (both
+modes fully warmed/compiled before measurement).
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import numpy as np
+
+from repro.core import (GrammarArrays, GrammarBatch, batched_term_vector,
+                        batched_word_count, compress_files, flatten,
+                        term_vector, word_count)
+
+from .common import emit, timeit
+
+
+def make_ragged_corpora(n: int, seed: int = 7) -> List[GrammarArrays]:
+    """n small corpora of deliberately different R/V/F (ragged batch)."""
+    rng = np.random.default_rng(seed)
+    gas = []
+    for i in range(n):
+        vocab = int(rng.integers(40, 400))
+        n_files = int(rng.integers(1, 7))
+        size = int(rng.integers(150, 900))
+        phrase = rng.integers(0, vocab, int(rng.integers(4, 9)))
+        files = []
+        for _ in range(n_files):
+            parts, total = [], 0
+            while total < size:
+                p = (phrase if rng.random() < 0.5
+                     else rng.integers(0, vocab, int(rng.integers(3, 12))))
+                parts.append(p)
+                total += len(p)
+            files.append(np.concatenate(parts)[:size])
+        g, nf = compress_files(files, vocab)
+        gas.append(flatten(g, vocab, nf))
+    return gas
+
+
+def run(smoke: bool = False) -> dict:
+    n = 4 if smoke else 16
+    gas = make_ragged_corpora(n)
+    gb = GrammarBatch.build(gas)
+
+    def seq_word_count():
+        for ga in gas:
+            jax.block_until_ready(word_count(ga, method="frontier"))
+
+    def bat_word_count():
+        jax.block_until_ready(batched_word_count(gb))
+
+    def seq_term_vector():
+        for ga in gas:
+            jax.block_until_ready(term_vector(ga, method="frontier"))
+
+    def bat_term_vector():
+        jax.block_until_ready(batched_term_vector(gb))
+
+    out = {}
+    for app, seq, bat in (("word_count", seq_word_count, bat_word_count),
+                          ("term_vector", seq_term_vector, bat_term_vector)):
+        t_seq = timeit(seq, repeat=3, warmup=1)
+        t_bat = timeit(bat, repeat=3, warmup=1)
+        speedup = t_seq / max(t_bat, 1e-12)
+        emit(f"batch/{app}/sequential", t_seq, f"n={n}")
+        emit(f"batch/{app}/batched", t_bat, f"n={n}")
+        emit(f"batch/{app}/speedup", 0.0, f"{speedup:.2f}x")
+        out[app] = speedup
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+    run(smoke="--smoke" in sys.argv)

@@ -5,7 +5,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
   fig10/*    — Fig. 10 analogue: init vs traversal phase split
   vi_c/*     — §VI-C analogue: top-down vs bottom-up + engine variants
   pipeline/* — compressed-store batch feed throughput
+  batch/*    — batched multi-corpus engine vs sequential per-corpus loop
   roofline/* — summary rows from the dry-run roofline table (if present)
+
+``--smoke`` runs a minimal fast subset (CI's sanity check that the
+benchmark harness still executes end to end).
 """
 
 from __future__ import annotations
@@ -15,6 +19,14 @@ import sys
 
 def main() -> None:
     quick = "--quick" in sys.argv
+    smoke = "--smoke" in sys.argv
+
+    from . import bench_batch
+
+    if smoke:
+        bench_batch.run(smoke=True)
+        return
+
     datasets = ("D", "R") if quick else ("A", "B", "D", "R")
 
     from . import bench_speedups, bench_phases, bench_traversal, \
@@ -23,6 +35,7 @@ def main() -> None:
     bench_phases.run(datasets)
     bench_traversal.run(datasets)
     bench_pipeline.run(("D", "R") if quick else ("B", "R"))
+    bench_batch.run()
 
     # roofline summary (reads dry-run artifacts if the sweep has run)
     try:

@@ -32,7 +32,9 @@ _SHARD_BUDGET = 1 << 30     # 1 GiB per npz shard
 
 
 def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
-    flat, _ = jax.tree.flatten_with_path(tree)
+    # jax.tree.flatten_with_path only exists on newer jax; tree_util has it
+    # everywhere this repo supports.
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
 
 

@@ -17,6 +17,12 @@ from .analytics import (word_count, sort_words, inverted_index, term_vector,
 from .selector import select_direction, estimate_costs
 from .memory import (ArenaPlan, plan_local_tables, plan_streams,
                      head_tail_upper_limit, stream_upper_limit)
+from .batch import (GrammarBatch, batched_top_down_weights,
+                    batched_per_file_weights, batched_word_count,
+                    batched_sort_words, batched_term_vector,
+                    batched_inverted_index, batched_ranked_inverted_index,
+                    batched_sequence_count, run_batched, unbatch,
+                    ANALYTICS_KINDS)
 
 __all__ = [
     "Grammar", "compress", "compress_files",
@@ -28,4 +34,8 @@ __all__ = [
     "select_direction", "estimate_costs",
     "ArenaPlan", "plan_local_tables", "plan_streams",
     "head_tail_upper_limit", "stream_upper_limit",
+    "GrammarBatch", "batched_top_down_weights", "batched_per_file_weights",
+    "batched_word_count", "batched_sort_words", "batched_term_vector",
+    "batched_inverted_index", "batched_ranked_inverted_index",
+    "batched_sequence_count", "run_batched", "unbatch", "ANALYTICS_KINDS",
 ]

@@ -38,26 +38,41 @@ def _global_reduce(ids: jnp.ndarray, vals: jnp.ndarray, nbins: int,
 
 # ------------------------------------------------------------------ apps --
 def word_count(ga: GrammarArrays, method: str = "auto",
-               backend: str = "jnp") -> jnp.ndarray:
-    """counts[v] = occurrences of word v in the whole corpus."""
-    method = _pick(ga, method)
-    w = top_down_weights(ga, method=method)
-    vals = jnp.asarray(ga.tw_cnt, jnp.float32) * w[jnp.asarray(ga.tw_rule)]
+               backend: str = "jnp",
+               weights: jnp.ndarray | None = None) -> jnp.ndarray:
+    """counts[v] = occurrences of word v in the whole corpus.
+
+    ``weights`` lets callers reuse a memoized traversal (the store caches
+    per-corpus weights for the serving layer) — it must equal
+    ``top_down_weights(ga)``.
+    """
+    if weights is None:
+        weights = top_down_weights(ga, method=_pick(ga, method))
+    vals = jnp.asarray(ga.tw_cnt, jnp.float32) * \
+        weights[jnp.asarray(ga.tw_rule)]
     return _global_reduce(jnp.asarray(ga.tw_word), vals, ga.vocab_size, backend)
 
 
-def sort_words(ga: GrammarArrays, method: str = "auto",
-               backend: str = "jnp") -> Tuple[jnp.ndarray, jnp.ndarray]:
+def sort_words(ga: GrammarArrays, method: str = "auto", backend: str = "jnp",
+               weights: jnp.ndarray | None = None
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Words sorted by frequency (desc). Returns (word_ids, counts)."""
-    counts = word_count(ga, method=method, backend=backend)
+    counts = word_count(ga, method=method, backend=backend, weights=weights)
     order = jnp.argsort(-counts, stable=True)
     return order, counts[order]
 
 
-def term_vector(ga: GrammarArrays, method: str = "auto") -> jnp.ndarray:
-    """tv[f, v] = occurrences of word v in file f.  Dense [F, V]."""
-    method = _pick(ga, method)
-    Wf = per_file_weights(ga, method=method)           # [R, F]
+def term_vector(ga: GrammarArrays, method: str = "auto",
+                file_weights: jnp.ndarray | None = None) -> jnp.ndarray:
+    """tv[f, v] = occurrences of word v in file f.  Dense [F, V].
+
+    ``file_weights`` lets callers reuse a memoized per-file traversal; it
+    must equal ``per_file_weights(ga)``.
+    """
+    if file_weights is None:
+        Wf = per_file_weights(ga, method=_pick(ga, method))  # [R, F]
+    else:
+        Wf = file_weights
     contrib = Wf[jnp.asarray(ga.tw_rule), :] * \
         jnp.asarray(ga.tw_cnt, jnp.float32)[:, None]   # [T, F]
     tv = jax.ops.segment_sum(contrib, jnp.asarray(ga.tw_word),
@@ -68,27 +83,31 @@ def term_vector(ga: GrammarArrays, method: str = "auto") -> jnp.ndarray:
     return tv
 
 
-def inverted_index(ga: GrammarArrays, method: str = "auto") -> jnp.ndarray:
+def inverted_index(ga: GrammarArrays, method: str = "auto",
+                   file_weights: jnp.ndarray | None = None) -> jnp.ndarray:
     """ii[f, v] = True iff word v occurs in file f."""
-    return term_vector(ga, method=method) > 0
+    return term_vector(ga, method=method, file_weights=file_weights) > 0
 
 
-def ranked_inverted_index(ga: GrammarArrays, method: str = "auto"
+def ranked_inverted_index(ga: GrammarArrays, method: str = "auto",
+                          file_weights: jnp.ndarray | None = None
                           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """For each word: files ranked by frequency (desc), with counts.
 
     Returns (ranking [V, F] of file ids, counts [V, F] aligned to ranking).
     """
-    tv = term_vector(ga, method=method)                # [F, V]
+    tv = term_vector(ga, method=method, file_weights=file_weights)  # [F, V]
     order = jnp.argsort(-tv, axis=0, stable=True)      # [F, V]
     ranked = jnp.take_along_axis(tv, order, axis=0)    # [F, V]
     return order.T, ranked.T
 
 
-def sequence_count(ga: GrammarArrays, l: int = 3, method: str = "auto"
+def sequence_count(ga: GrammarArrays, l: int = 3, method: str = "auto",
+                   weights: jnp.ndarray | None = None
                    ) -> Tuple[np.ndarray, np.ndarray]:
     """Distinct l-gram counts (paper §IV-D).  See core/sequence.py."""
-    return _sequence.sequence_count(ga, l=l, method=_pick(ga, method))
+    return _sequence.sequence_count(ga, l=l, method=_pick(ga, method),
+                                    weights=weights)
 
 
 # ---------------------------------------------------------------- helpers --

@@ -1,0 +1,628 @@
+"""Batched multi-corpus analytics: pack N grammars, traverse them together.
+
+The single-corpus engine (traversal.py / analytics.py) runs one compressed
+corpus per jitted call.  Under serving load ("heavy traffic" — many corpora,
+many queries) that wastes the device: every corpus gets its own dispatch,
+its own while_loop, its own compilation (shapes differ corpus to corpus).
+
+This module is the TPU analogue of batching many compressed segments into
+one GPU program: a :class:`GrammarBatch` packs N :class:`GrammarArrays`
+into padded, bucketed ``[N, ...]`` device arrays (the pre-planned memory
+pool of paper §IV-C, extended across corpora), and every analytic runs as
+ONE jitted program over the whole batch:
+
+* ``frontier`` traversal — vmap of the masked-rounds engine over the packed
+  batch, sharing a single ``while_loop`` whose stop flag is ``mask.any()``
+  across *all* corpora (finished corpora idle harmlessly: their masks are
+  empty, so extra rounds are no-ops).
+* ``leveled`` traversal — per-level edge segments are padded to a common
+  width across corpora, so the level schedule is shared and each real edge
+  is still touched exactly once.
+* all six analytics (word count, sort, inverted index, term vector,
+  sequence count, ranked inverted index) — bit-identical to running the
+  single-corpus functions in a Python loop (tests/test_batch.py).
+
+Padding convention: padded edges carry ``freq == 0`` and are additionally
+masked by ``edge_valid``; padded rule slots have ``in_deg == out_deg == 0``
+(they become "ready" in round 0 with weight 0 and never contribute).
+Dimensions are bucketed (rounded up to powers of two) so batches of similar
+size hit the same compiled program — the dispatch layer
+(serving/analytics_server.py) groups queries by this signature.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from dataclasses import field as dataclass_field
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .grammar import GrammarArrays
+from . import sequence as _sequence
+from .sequence import _K_HEAD, _K_LIT, _K_TAIL
+
+
+# ----------------------------------------------------------------------- #
+# Packed layout                                                            #
+# ----------------------------------------------------------------------- #
+def _round_up_pow2(x: int, minimum: int = 8) -> int:
+    if x <= minimum:
+        return minimum
+    return 1 << (int(x) - 1).bit_length()
+
+
+def _pad_stack(arrs: Sequence[np.ndarray], width: int, fill=0,
+               dtype=np.int32) -> np.ndarray:
+    out = np.full((len(arrs), width), fill, dtype)
+    for i, a in enumerate(arrs):
+        out[i, : len(a)] = a
+    return out
+
+
+@dataclass(frozen=True, eq=False)   # eq over jnp fields would raise; identity
+class GrammarBatch:
+    """N grammars packed into padded ``[N, ...]`` device arrays."""
+
+    gas: Tuple[GrammarArrays, ...]      # originals (host, for finalization)
+
+    # padded dims (bucketed)
+    R_pad: int
+    E_pad: int
+    T_pad: int
+    F_pad: int
+    V_pad: int
+    Tf_pad: int
+
+    # per-corpus true sizes (host)
+    num_rules: np.ndarray               # [N]
+    vocab_sizes: np.ndarray             # [N]
+    num_files: np.ndarray               # [N]
+
+    # packed DAG (device)
+    edge_parent: jnp.ndarray            # [N, E_pad] int32
+    edge_child: jnp.ndarray             # [N, E_pad] int32
+    edge_freq: jnp.ndarray              # [N, E_pad] float32 (0 on padding)
+    edge_valid: jnp.ndarray             # [N, E_pad] bool
+    in_deg: jnp.ndarray                 # [N, R_pad] int32
+    root_seen: jnp.ndarray              # [N, R_pad] int32 (in-edges from root)
+
+    # packed local word tables (device)
+    tw_rule: jnp.ndarray                # [N, T_pad] int32
+    tw_word: jnp.ndarray                # [N, T_pad] int32
+    tw_cnt: jnp.ndarray                 # [N, T_pad] float32 (0 on padding)
+
+    # packed per-file root segments (device)
+    fedge_file: jnp.ndarray             # [N, Ef_pad] int32
+    fedge_child: jnp.ndarray            # [N, Ef_pad] int32
+    fedge_freq: jnp.ndarray             # [N, Ef_pad] float32
+    fword_file: jnp.ndarray             # [N, Tf_pad] int32
+    fword_word: jnp.ndarray             # [N, Tf_pad] int32
+    fword_cnt: jnp.ndarray              # [N, Tf_pad] float32
+
+    # leveled schedule: per-level segments padded to shared widths
+    lv_parent: jnp.ndarray              # [N, EL] int32
+    lv_child: jnp.ndarray               # [N, EL] int32
+    lv_freq: jnp.ndarray                # [N, EL] float32 (0 on padding)
+    lv_slices: Tuple[Tuple[int, int], ...]   # shared (start, end) per level
+
+    # per-batch memo for host-side sequence plans (mutable contents are
+    # fine on a frozen dataclass; keyed by window length l)
+    _plan_cache: dict = dataclass_field(default_factory=dict, repr=False,
+                                        compare=False)
+
+    @property
+    def n(self) -> int:
+        return len(self.gas)
+
+    @property
+    def signature(self) -> Tuple[int, ...]:
+        """Compilation signature: batches with equal signatures (and equal
+        ``lv_slices`` for the leveled engine) reuse jitted programs."""
+        return (self.n, self.R_pad, self.E_pad, self.T_pad, self.F_pad,
+                self.V_pad, int(self.fedge_file.shape[1]), self.Tf_pad)
+
+    # ------------------------------------------------------------ build --
+    @classmethod
+    def build(cls, gas: Sequence[GrammarArrays],
+              bucket: bool = True) -> "GrammarBatch":
+        if not gas:
+            raise ValueError("GrammarBatch needs at least one corpus")
+        gas = tuple(gas)
+        rnd = _round_up_pow2 if bucket else (lambda x, minimum=1:
+                                             max(int(x), minimum))
+        R_pad = rnd(max(ga.num_rules for ga in gas))
+        E_pad = rnd(max(ga.num_edges for ga in gas))
+        T_pad = rnd(max(len(ga.tw_rule) for ga in gas))
+        F_pad = rnd(max(ga.num_files for ga in gas), 1)
+        V_pad = rnd(max(ga.vocab_size for ga in gas))
+        Ef_pad = rnd(max(len(ga.fedge_file) for ga in gas), 1)
+        Tf_pad = rnd(max(len(ga.fword_file) for ga in gas), 1)
+
+        in_deg = _pad_stack([ga.in_deg for ga in gas], R_pad)
+        root_seen = _pad_stack(
+            [np.bincount(ga.edge_child[ga.edge_parent == 0],
+                         minlength=ga.num_rules).astype(np.int32)
+             for ga in gas], R_pad)
+        valid = np.zeros((len(gas), E_pad), bool)
+        for i, ga in enumerate(gas):
+            valid[i, : ga.num_edges] = True
+
+        # leveled schedule: align per-level segments across corpora
+        n_levels = max(ga.num_levels for ga in gas)
+        per_corpus = []
+        for ga in gas:
+            slices, order = ga.level_edge_slices()
+            per_corpus.append((slices, order))
+        widths = []
+        for lv in range(n_levels):
+            w = 0
+            for (slices, _) in per_corpus:
+                if lv < len(slices):
+                    s, e = slices[lv]
+                    w = max(w, e - s)
+            widths.append(w)
+        EL = sum(widths)
+        lv_parent = np.zeros((len(gas), EL), np.int32)
+        lv_child = np.zeros((len(gas), EL), np.int32)
+        lv_freq = np.zeros((len(gas), EL), np.float32)
+        lv_slices: List[Tuple[int, int]] = []
+        off = 0
+        for lv, w in enumerate(widths):
+            lv_slices.append((off, off + w))
+            for i, (ga, (slices, order)) in enumerate(zip(gas, per_corpus)):
+                if lv >= len(slices):
+                    continue
+                s, e = slices[lv]
+                sel = order[s:e]
+                lv_parent[i, off: off + (e - s)] = ga.edge_parent[sel]
+                lv_child[i, off: off + (e - s)] = ga.edge_child[sel]
+                lv_freq[i, off: off + (e - s)] = ga.edge_freq[sel]
+            off += w
+
+        return cls(
+            gas=gas,
+            R_pad=R_pad, E_pad=E_pad, T_pad=T_pad, F_pad=F_pad,
+            V_pad=V_pad, Tf_pad=Tf_pad,
+            num_rules=np.array([ga.num_rules for ga in gas]),
+            vocab_sizes=np.array([ga.vocab_size for ga in gas]),
+            num_files=np.array([ga.num_files for ga in gas]),
+            edge_parent=jnp.asarray(
+                _pad_stack([ga.edge_parent for ga in gas], E_pad)),
+            edge_child=jnp.asarray(
+                _pad_stack([ga.edge_child for ga in gas], E_pad)),
+            edge_freq=jnp.asarray(
+                _pad_stack([ga.edge_freq for ga in gas], E_pad,
+                           dtype=np.float32)),
+            edge_valid=jnp.asarray(valid),
+            in_deg=jnp.asarray(in_deg),
+            root_seen=jnp.asarray(root_seen),
+            tw_rule=jnp.asarray(_pad_stack([ga.tw_rule for ga in gas], T_pad)),
+            tw_word=jnp.asarray(_pad_stack([ga.tw_word for ga in gas], T_pad)),
+            tw_cnt=jnp.asarray(
+                _pad_stack([ga.tw_cnt for ga in gas], T_pad,
+                           dtype=np.float32)),
+            fedge_file=jnp.asarray(
+                _pad_stack([ga.fedge_file for ga in gas], Ef_pad)),
+            fedge_child=jnp.asarray(
+                _pad_stack([ga.fedge_child for ga in gas], Ef_pad)),
+            fedge_freq=jnp.asarray(
+                _pad_stack([ga.fedge_freq for ga in gas], Ef_pad,
+                           dtype=np.float32)),
+            fword_file=jnp.asarray(
+                _pad_stack([ga.fword_file for ga in gas], Tf_pad)),
+            fword_word=jnp.asarray(
+                _pad_stack([ga.fword_word for ga in gas], Tf_pad)),
+            fword_cnt=jnp.asarray(
+                _pad_stack([ga.fword_cnt for ga in gas], Tf_pad,
+                           dtype=np.float32)),
+            lv_parent=jnp.asarray(lv_parent),
+            lv_child=jnp.asarray(lv_child),
+            lv_freq=jnp.asarray(lv_freq),
+            lv_slices=tuple(lv_slices),
+        )
+
+
+# ----------------------------------------------------------------------- #
+# Batched traversals                                                       #
+# ----------------------------------------------------------------------- #
+@jax.jit
+def _frontier_weights_batched(ep, ec, ef, valid, in_deg):
+    """vmap of the masked frontier rounds; one shared while_loop.
+
+    The vmapped ``while_loop`` runs until every corpus's mask is empty;
+    corpora that finish early keep executing no-op rounds (their ``mask``
+    is all-False, so delta and seen are zero and the state is a fixpoint).
+    """
+    R = in_deg.shape[1]
+
+    def one(ep, ec, ef, valid, in_deg):
+        def cond(state):
+            _, _, mask, _ = state
+            return jnp.any(mask)
+
+        def body(state):
+            weight, cur_in, mask, ever = state
+            active_e = mask[ep] & valid
+            contrib = jnp.where(active_e, ef * weight[ep], 0.0)
+            delta = jax.ops.segment_sum(contrib, ec, num_segments=R)
+            seen = jax.ops.segment_sum(active_e.astype(jnp.int32), ec,
+                                       num_segments=R)
+            weight = weight + delta
+            cur_in = cur_in + seen
+            new_ready = (cur_in == in_deg) & (~ever)
+            return weight, cur_in, new_ready, ever | new_ready
+
+        weight0 = jnp.zeros(R, jnp.float32).at[0].set(1.0)
+        mask0 = (in_deg == 0)
+        state = (weight0, jnp.zeros(R, jnp.int32), mask0, mask0)
+        weight, _, _, _ = jax.lax.while_loop(cond, body, state)
+        return weight
+
+    return jax.vmap(one)(ep, ec, ef, valid, in_deg)
+
+
+@functools.partial(jax.jit, static_argnames=("slices", "R"))
+def _leveled_weights_batched(ep, ec, ef, slices, R):
+    """Shared static level schedule; each real edge touched exactly once
+    (padded slots have freq 0)."""
+    N = ep.shape[0]
+    w = jnp.zeros((N, R), jnp.float32).at[:, 0].set(1.0)
+    seg = jax.vmap(lambda c, i: jax.ops.segment_sum(c, i, num_segments=R))
+    for (s, e) in slices:
+        if s == e:
+            continue
+        contrib = ef[:, s:e] * jnp.take_along_axis(w, ep[:, s:e], axis=1)
+        w = w + seg(contrib, ec[:, s:e])
+    return w
+
+
+def batched_top_down_weights(gb: GrammarBatch,
+                             method: str = "frontier") -> jnp.ndarray:
+    """weights[i, r] == occurrences of corpus i's rule r. Shape [N, R_pad]."""
+    if method in ("frontier", "auto", "top_down", "bottom_up"):
+        return _frontier_weights_batched(
+            gb.edge_parent, gb.edge_child, gb.edge_freq, gb.edge_valid,
+            gb.in_deg)
+    if method == "leveled":
+        return _leveled_weights_batched(
+            gb.lv_parent, gb.lv_child, gb.lv_freq, gb.lv_slices, gb.R_pad)
+    raise ValueError(f"unknown batched traversal method {method!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("F",))
+def _per_file_weights_batched(ep, ec, ef, valid, in_deg, root_seen,
+                              fedge_child, fedge_file, fedge_freq, F):
+    R = in_deg.shape[1]
+
+    def one(ep, ec, ef, valid, in_deg, root_seen, fc, ff, fq):
+        W0 = jnp.zeros((R, F), jnp.float32).at[fc, ff].add(fq)
+
+        def cond(state):
+            _, _, mask, _ = state
+            return jnp.any(mask)
+
+        def body(state):
+            W, cur_in, mask, ever = state
+            active_e = mask[ep] & valid & (ep != 0)
+            gathered = W[ep, :] * ef[:, None]
+            gathered = jnp.where(active_e[:, None], gathered, 0.0)
+            delta = jax.ops.segment_sum(gathered, ec, num_segments=R)
+            seen = jax.ops.segment_sum(active_e.astype(jnp.int32), ec,
+                                       num_segments=R)
+            W = W + delta
+            cur_in = cur_in + seen
+            new_ready = (cur_in == in_deg) & (~ever)
+            return W, cur_in, new_ready, ever | new_ready
+
+        mask0 = (root_seen == in_deg) & (in_deg > 0)
+        state = (W0, root_seen, mask0, mask0 | (in_deg == 0))
+        W, _, _, _ = jax.lax.while_loop(cond, body, state)
+        return W
+
+    return jax.vmap(one)(ep, ec, ef, valid, in_deg, root_seen,
+                         fedge_child, fedge_file, fedge_freq)
+
+
+@functools.partial(jax.jit, static_argnames=("slices", "R", "F"))
+def _per_file_leveled_batched(ep, ec, ef, fedge_child, fedge_file,
+                              fedge_freq, slices, R, F):
+    """Leveled per-file traversal: root edges are consumed by the per-file
+    init (splitter segments), so every non-root edge is touched once.
+    Padded slots have ``parent == 0`` and are excluded by the same gate."""
+    N = ep.shape[0]
+    W = jax.vmap(
+        lambda fc, ff, fq: jnp.zeros((R, F), jnp.float32).at[fc, ff].add(fq)
+    )(fedge_child, fedge_file, fedge_freq)
+    seg = jax.vmap(lambda c, i: jax.ops.segment_sum(c, i, num_segments=R))
+    for (s, e) in slices:
+        if s == e:
+            continue
+        keep = (ep[:, s:e] != 0).astype(jnp.float32)
+        gathered = jnp.take_along_axis(W, ep[:, s:e, None], axis=1)  # [N,w,F]
+        contrib = gathered * (ef[:, s:e] * keep)[:, :, None]
+        W = W + seg(contrib, ec[:, s:e])
+    return W
+
+
+def batched_per_file_weights(gb: GrammarBatch,
+                             method: str = "frontier") -> jnp.ndarray:
+    """Wf[i, r, f] == occurrences of rule r inside file f of corpus i."""
+    if method in ("frontier", "auto", "top_down", "bottom_up"):
+        return _per_file_weights_batched(
+            gb.edge_parent, gb.edge_child, gb.edge_freq, gb.edge_valid,
+            gb.in_deg, gb.root_seen, gb.fedge_child, gb.fedge_file,
+            gb.fedge_freq, gb.F_pad)
+    if method == "leveled":
+        return _per_file_leveled_batched(
+            gb.lv_parent, gb.lv_child, gb.lv_freq, gb.fedge_child,
+            gb.fedge_file, gb.fedge_freq, gb.lv_slices, gb.R_pad, gb.F_pad)
+    raise ValueError(f"unknown batched traversal method {method!r}")
+
+
+# ----------------------------------------------------------------------- #
+# Batched analytics (the six CompressDirect apps)                          #
+# ----------------------------------------------------------------------- #
+@functools.partial(jax.jit, static_argnames=("V",))
+def _word_count_from_weights(w, tw_rule, tw_word, tw_cnt, V):
+    vals = tw_cnt * jnp.take_along_axis(w, tw_rule, axis=1)
+    return jax.vmap(
+        lambda i, v: jax.ops.segment_sum(v, i, num_segments=V))(tw_word, vals)
+
+
+def batched_word_count(gb: GrammarBatch, method: str = "frontier",
+                       backend: str = "jnp") -> jnp.ndarray:
+    """counts[i, v] for every corpus in one jitted call. Shape [N, V_pad]."""
+    w = batched_top_down_weights(gb, method=method)
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        vals = gb.tw_cnt * jnp.take_along_axis(w, gb.tw_rule, axis=1)
+        return kops.weighted_bincount_batched(gb.tw_word, vals, gb.V_pad)
+    return _word_count_from_weights(w, gb.tw_rule, gb.tw_word, gb.tw_cnt,
+                                    gb.V_pad)
+
+
+def batched_sort_words(gb: GrammarBatch, method: str = "frontier",
+                       backend: str = "jnp"
+                       ) -> List[Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Per corpus (word_ids, counts) sorted by frequency desc — the heavy
+    reduction is batched; the final per-corpus argsort runs on true sizes so
+    results match :func:`repro.core.analytics.sort_words` exactly."""
+    wc = batched_word_count(gb, method=method, backend=backend)
+    out = []
+    for i, ga in enumerate(gb.gas):
+        counts = wc[i, : ga.vocab_size]
+        order = jnp.argsort(-counts, stable=True)
+        out.append((order, counts[order]))
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("V",))
+def _term_vector_from_weights(Wf, tw_rule, tw_word, tw_cnt,
+                              fword_file, fword_word, fword_cnt, V):
+    def one(Wf, tr, twd, tc, ff, fw, fc):
+        contrib = Wf[tr, :] * tc[:, None]                       # [T, F]
+        tv = jax.ops.segment_sum(contrib, twd, num_segments=V)  # [V, F]
+        tv = tv.T
+        return tv.at[ff, fw].add(fc)
+
+    return jax.vmap(one)(Wf, tw_rule, tw_word, tw_cnt,
+                         fword_file, fword_word, fword_cnt)
+
+
+def batched_term_vector(gb: GrammarBatch,
+                        method: str = "frontier") -> jnp.ndarray:
+    """tv[i, f, v] — dense per-file counts, all corpora in one call."""
+    Wf = batched_per_file_weights(gb, method=method)
+    return _term_vector_from_weights(
+        Wf, gb.tw_rule, gb.tw_word, gb.tw_cnt,
+        gb.fword_file, gb.fword_word, gb.fword_cnt, gb.V_pad)
+
+
+def batched_inverted_index(gb: GrammarBatch,
+                           method: str = "frontier") -> jnp.ndarray:
+    return batched_term_vector(gb, method=method) > 0
+
+
+def batched_ranked_inverted_index(gb: GrammarBatch, method: str = "frontier"
+                                  ) -> List[Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Per corpus (ranking [V, F], counts [V, F]) — batched traversal, true
+    per-corpus shapes out (matches the single-corpus function exactly)."""
+    tv = batched_term_vector(gb, method=method)
+    out = []
+    for i, ga in enumerate(gb.gas):
+        tvi = tv[i, : ga.num_files, : ga.vocab_size]
+        order = jnp.argsort(-tvi, axis=0, stable=True)
+        ranked = jnp.take_along_axis(tvi, order, axis=0)
+        out.append((order.T, ranked.T))
+    return out
+
+
+def unbatch(gb: GrammarBatch, packed: jnp.ndarray,
+            kind: str = "word_count") -> List[np.ndarray]:
+    """Slice a packed ``[N, ...]`` result back to per-corpus true shapes."""
+    out = []
+    for i, ga in enumerate(gb.gas):
+        if kind == "word_count":
+            out.append(np.asarray(packed[i, : ga.vocab_size]))
+        elif kind in ("term_vector", "inverted_index"):
+            out.append(np.asarray(packed[i, : ga.num_files, : ga.vocab_size]))
+        else:
+            raise ValueError(f"cannot unbatch kind {kind!r}")
+    return out
+
+
+# ----------------------------------------------------------------------- #
+# Batched sequence count (paper §IV-D across corpora)                      #
+# ----------------------------------------------------------------------- #
+@jax.jit
+def _resolve_buffers_batched(is_lit, lit, src, idx, dep):
+    R = is_lit.shape[1]
+
+    def one(is_lit, lit, src, idx, dep):
+        leaf = (dep < 0).all(axis=1)
+        buf0 = jnp.where(is_lit, lit, -1)
+
+        def cond(state):
+            _, ready, prev = state
+            return jnp.any(ready != prev)
+
+        def body(state):
+            buf, ready, _ = state
+            dep_ok = jnp.where(dep < 0, True,
+                               ready[jnp.clip(dep, 0, R - 1)]).all(axis=1)
+            newly = dep_ok & (~ready)
+            gathered = jnp.where(is_lit, lit, buf[src, idx])
+            buf = jnp.where(newly[:, None], gathered, buf)
+            return buf, ready | newly, ready
+
+        buf, _, _ = jax.lax.while_loop(
+            cond, body, (buf0, leaf, jnp.zeros(R, bool)))
+        return buf
+
+    return jax.vmap(one)(is_lit, lit, src, idx, dep)
+
+
+@functools.partial(jax.jit, static_argnames=("l",))
+def _count_windows_batched(head, tail, weights, st_kind, st_lit, st_src,
+                           st_idx, st_symj, win_start, win_rule, win_valid,
+                           l):
+    def one(head, tail, w, kind, lit, src, idx, symj, ws, wr, wv):
+        tok = jnp.where(kind == _K_LIT, lit,
+                        jnp.where(kind == _K_HEAD, head[src, idx],
+                                  jnp.where(kind == _K_TAIL,
+                                            tail[src, idx], lit)))
+        pos = ws[:, None] + jnp.arange(l)[None, :]
+        wtok = tok[pos]                                   # [Nw, l]
+        wsym = symj[pos]
+        valid = (wtok >= 0).all(axis=1) & (wsym[:, 0] != wsym[:, -1]) & wv
+        wweight = jnp.where(valid, w[wr], 0.0)
+        order = jnp.lexsort(tuple(wtok[:, c] for c in range(l - 1, -1, -1)))
+        stok = wtok[order]
+        sw = wweight[order]
+        newseg = jnp.concatenate([
+            jnp.array([True]),
+            (stok[1:] != stok[:-1]).any(axis=1)])
+        seg = jnp.cumsum(newseg) - 1
+        counts = jax.ops.segment_sum(sw, seg, num_segments=stok.shape[0])
+        return stok, seg, counts
+
+    return jax.vmap(one)(head, tail, weights, st_kind, st_lit, st_src,
+                         st_idx, st_symj, win_start, win_rule, win_valid)
+
+
+def _padded_sequence_plans(gb: GrammarBatch, l: int):
+    """Host-side planning + padding + resolved head/tail buffers, memoized
+    per (batch, l): the serving layer reuses packed batches across query
+    groups, so repeat sequence_count traffic pays the planning once."""
+    if l in gb._plan_cache:
+        return gb._plan_cache[l]
+    N = gb.n
+    h = l - 1
+    htps = [_sequence.plan_head_tail(ga, l) for ga in gb.gas]
+    sps = [_sequence.plan_stream(ga, l) for ga in gb.gas]
+
+    R_pad = gb.R_pad
+    Kd = max(max(p.head_dep.shape[1], p.tail_dep.shape[1]) for p in htps)
+
+    def _stack_plan(get_arr, fill, dtype, width2):
+        out = np.full((N, R_pad, width2), fill, dtype)
+        for i, p in enumerate(htps):
+            a = get_arr(p)
+            out[i, : a.shape[0], : a.shape[1]] = a
+        return jnp.asarray(out)
+
+    def _resolve(side: str) -> jnp.ndarray:
+        return _resolve_buffers_batched(
+            _stack_plan(lambda p: getattr(p, f"{side}_is_lit"), False, bool, h),
+            _stack_plan(lambda p: getattr(p, f"{side}_lit"), -1, np.int32, h),
+            _stack_plan(lambda p: getattr(p, f"{side}_src"), 0, np.int32, h),
+            _stack_plan(lambda p: getattr(p, f"{side}_idx"), 0, np.int32, h),
+            _stack_plan(lambda p: getattr(p, f"{side}_dep"), -1, np.int32, Kd))
+
+    head = _resolve("head")
+    tail = _resolve("tail")
+
+    S_pad = max(max(len(p.st_kind) for p in sps), l)
+    W_pad = max(max(len(p.win_start) for p in sps), 1)
+    win_valid = np.zeros((N, W_pad), bool)
+    for i, p in enumerate(sps):
+        win_valid[i, : len(p.win_start)] = True
+    stream = (
+        jnp.asarray(_pad_stack([p.st_kind for p in sps], S_pad,
+                               fill=_sequence._K_BREAK, dtype=np.int8)),
+        jnp.asarray(_pad_stack([p.st_lit for p in sps], S_pad,
+                               fill=_sequence._BREAK)),
+        jnp.asarray(_pad_stack([p.st_src for p in sps], S_pad)),
+        jnp.asarray(_pad_stack([p.st_idx for p in sps], S_pad)),
+        jnp.asarray(_pad_stack([p.st_symj for p in sps], S_pad)),
+        jnp.asarray(_pad_stack([p.win_start for p in sps], W_pad)),
+        jnp.asarray(_pad_stack([p.win_rule for p in sps], W_pad)),
+        jnp.asarray(win_valid))
+    gb._plan_cache[l] = (head, tail, stream)
+    return gb._plan_cache[l]
+
+
+def batched_sequence_count(gb: GrammarBatch, l: int = 3,
+                           method: str = "frontier"
+                           ) -> List[Tuple[np.ndarray, np.ndarray]]:
+    """Per corpus (grams [U, l], counts [U]) — head/tail resolution, stream
+    gathers, window sorting and segment reduction all run batched; only the
+    final distinct-gram extraction is per corpus (ragged output)."""
+    if l < 2:
+        raise ValueError("sequence_count needs l >= 2")
+    N = gb.n
+    weights = batched_top_down_weights(gb, method=method)
+    head, tail, stream = _padded_sequence_plans(gb, l)
+    stok, seg, counts = _count_windows_batched(head, tail, weights,
+                                               *stream, l)
+
+    stok_h = np.asarray(stok)
+    seg_h = np.asarray(seg)
+    counts_h = np.asarray(counts)
+    out: List[Tuple[np.ndarray, np.ndarray]] = []
+    for i in range(N):
+        n_seg = int(seg_h[i, -1]) + 1
+        first_idx = np.searchsorted(seg_h[i], np.arange(n_seg), "left")
+        grams = stok_h[i][first_idx]
+        cnts = counts_h[i, :n_seg]
+        keep = cnts > 0           # padded / invalid windows carry zero weight
+        out.append((grams[keep].astype(np.int32), cnts[keep]))
+    return out
+
+
+# ----------------------------------------------------------------------- #
+# Convenience: run any of the six analytics batched, per-corpus results    #
+# ----------------------------------------------------------------------- #
+ANALYTICS_KINDS = ("word_count", "sort", "inverted_index", "term_vector",
+                   "sequence_count", "ranked_inverted_index")
+
+
+def run_batched(gb: GrammarBatch, kind: str, method: str = "frontier",
+                backend: str = "jnp", l: int = 3) -> List:
+    """Dispatch one analytics kind over the whole batch; returns a list of
+    per-corpus results shaped exactly like the single-corpus functions."""
+    if kind == "word_count":
+        return unbatch(gb, batched_word_count(gb, method=method,
+                                              backend=backend), "word_count")
+    if kind == "sort":
+        return [(np.asarray(o), np.asarray(c))
+                for (o, c) in batched_sort_words(gb, method=method,
+                                                 backend=backend)]
+    if kind == "term_vector":
+        return unbatch(gb, batched_term_vector(gb, method=method),
+                       "term_vector")
+    if kind == "inverted_index":
+        return unbatch(gb, batched_inverted_index(gb, method=method),
+                       "inverted_index")
+    if kind == "ranked_inverted_index":
+        return [(np.asarray(r), np.asarray(c))
+                for (r, c) in batched_ranked_inverted_index(gb,
+                                                            method=method)]
+    if kind == "sequence_count":
+        return batched_sequence_count(gb, l=l, method=method)
+    raise ValueError(f"unknown analytics kind {kind!r}; "
+                     f"expected one of {ANALYTICS_KINDS}")

@@ -282,20 +282,23 @@ def resolve_head_tail(ga: GrammarArrays, plan: HeadTailPlan
 # ----------------------------------------------------------------------- #
 # Device phase 2: gather streams, count windows (paper Fig. 8)             #
 # ----------------------------------------------------------------------- #
-def sequence_count(ga: GrammarArrays, l: int = 3, method: str = "frontier"
+def sequence_count(ga: GrammarArrays, l: int = 3, method: str = "frontier",
+                   weights: jnp.ndarray | None = None
                    ) -> Tuple[np.ndarray, np.ndarray]:
     """Count all l-grams of the corpus directly on the grammar.
 
     Returns (grams [U, l], counts [U]) for the U distinct l-grams, sorted
     lexicographically.  File splitters break windows (sequences never span
-    files), matching per-file direct counting.
+    files), matching per-file direct counting.  ``weights`` lets callers
+    reuse a memoized traversal (must equal ``top_down_weights(ga)``).
     """
     if l < 2:
         raise ValueError("sequence_count needs l >= 2")
     htp = plan_head_tail(ga, l)
     sp = plan_stream(ga, l)
     head, tail = resolve_head_tail(ga, htp)
-    weights = top_down_weights(ga, method=method)
+    if weights is None:
+        weights = top_down_weights(ga, method=method)
 
     if sp.win_start.shape[0] == 0:
         return np.zeros((0, l), np.int32), np.zeros((0,), np.float32)

@@ -11,13 +11,15 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
-from dataclasses import dataclass
-from typing import List, Optional
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.core import GrammarArrays, compress_files, flatten
 from repro.core.grammar import expand_range
+from repro.core.traversal import per_file_weights as _per_file_weights
+from repro.core.traversal import top_down_weights as _top_down_weights
 
 
 _ARRAY_FIELDS = [f.name for f in dataclasses.fields(GrammarArrays)
@@ -30,6 +32,10 @@ class CompressedCorpus:
     ga: GrammarArrays
     file_starts: np.ndarray     # [F] global terminal offset of each file
     file_lens: np.ndarray       # [F]
+    # memoized traversal weights: corpora are immutable once built, so the
+    # serving layer reuses one traversal across any number of queries
+    _weights_cache: Dict = field(default_factory=dict, repr=False,
+                                 compare=False)
 
     # ------------------------------------------------------------ build --
     @classmethod
@@ -79,6 +85,29 @@ class CompressedCorpus:
         """Expand from the concatenated corpus stream (splitters included —
         callers use them as document separators)."""
         return expand_range(self.ga, int(offset), int(length))
+
+    # ------------------------------------------------- memoized traversal --
+    def top_down_weights(self, method: str = "frontier"):
+        """Per-rule occurrence weights, memoized (analytics reuse them)."""
+        key = ("top_down", method)
+        if key not in self._weights_cache:
+            self._weights_cache[key] = _top_down_weights(self.ga,
+                                                         method=method)
+        return self._weights_cache[key]
+
+    def per_file_weights(self, method: str = "frontier"):
+        """Per-(rule, file) occurrence weights, memoized."""
+        key = ("per_file", method)
+        if key not in self._weights_cache:
+            self._weights_cache[key] = _per_file_weights(self.ga,
+                                                         method=method)
+        return self._weights_cache[key]
+
+    def cached_weight_keys(self):
+        return tuple(sorted(self._weights_cache))
+
+    def clear_weight_cache(self) -> None:
+        self._weights_cache.clear()
 
     def stats(self) -> dict:
         return {

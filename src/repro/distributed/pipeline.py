@@ -45,7 +45,9 @@ def gpipe(stage_fn: Callable, mesh: Mesh, n_stages: int,
             # params: [1, ...] my stage's slice; mb: [M, ...] (replicated in)
             params = jax.tree.map(lambda x: x[0], params)
             idx = jax.lax.axis_index(stage_axis)
-            S = jax.lax.axis_size(stage_axis)
+            # jax.lax.axis_size is not available on older jax; psum of ones
+            # is the portable spelling.
+            S = jax.lax.psum(1, stage_axis)
             ticks = M + S - 1
 
             def tick(carry, t):
@@ -72,9 +74,14 @@ def gpipe(stage_fn: Callable, mesh: Mesh, n_stages: int,
             # replicated microbatch buffer -> promote explicitly (jax>=0.8
             # varying-manual-axes typing)
             _pvary = getattr(jax.lax, "pvary", None)
-            if _pvary is None:                       # pragma: no cover
-                def _pvary(x, axes):
+            if _pvary is None and hasattr(jax.lax, "pcast"):
+                def _pvary(x, axes):                 # pragma: no cover
                     return jax.lax.pcast(x, axes, to="varying")
+            if _pvary is None:
+                # pre-varying-typing jax: replicated values are accepted as
+                # scan carries directly, no promotion needed
+                def _pvary(x, axes):
+                    return x
             buf0 = _pvary(jnp.zeros_like(mb[0]), (stage_axis,))
             outs0 = _pvary(jnp.zeros_like(mb), (stage_axis,))
             (_, outs), _ = jax.lax.scan(tick, (buf0, outs0),

@@ -2,7 +2,10 @@
 
 ``interpret`` defaults to auto: real lowering on TPU, interpret mode on CPU
 (the assignment's validation mode).  Both wrappers fall back to the jnp
-reference for degenerate shapes where a kernel launch is pure overhead.
+reference for degenerate shapes where a kernel launch is pure overhead; the
+dispatch predicates are exposed (``bincount_use_ref`` / ``ell_use_ref``) so
+tests can assert the routing — including the VMEM-limit branch — without
+allocating the big inputs that trigger it.
 """
 
 from __future__ import annotations
@@ -15,6 +18,25 @@ import jax.numpy as jnp
 from . import ref
 from .bincount import weighted_bincount_pallas
 from .propagate import ell_row_sums_pallas
+
+# Below these sizes a kernel launch is pure overhead.
+BINCOUNT_MIN_N = 64
+BINCOUNT_MIN_BINS = 8
+ELL_MIN_ROWS = 64
+# The ELL kernel keeps the whole weight vector VMEM-resident (~16 MB);
+# above ~3.5M rules it cannot fit and the jnp reference takes over.
+ELL_VMEM_WEIGHT_LIMIT = 3 << 20
+
+
+def bincount_use_ref(n: int, nbins: int) -> bool:
+    """True when weighted_bincount should route to the jnp reference."""
+    return n < BINCOUNT_MIN_N or nbins < BINCOUNT_MIN_BINS
+
+
+def ell_use_ref(num_weights: int, rows: int) -> bool:
+    """True when ell_row_sums should route to the jnp reference (small
+    shapes, or weight vectors too large for VMEM)."""
+    return num_weights > ELL_VMEM_WEIGHT_LIMIT or rows < ELL_MIN_ROWS
 
 
 @functools.lru_cache(None)
@@ -34,10 +56,36 @@ def weighted_bincount(ids: jnp.ndarray, vals: jnp.ndarray, nbins: int,
     """MXU histogram: out[b] = sum(vals[ids == b]).  See bincount.py."""
     if ids.shape[0] == 0:
         return jnp.zeros(nbins, jnp.float32)
-    if ids.shape[0] < 64 or nbins < 8:        # launch overhead dominates
+    if bincount_use_ref(ids.shape[0], nbins):
         return ref.weighted_bincount_ref(ids, vals, nbins)
     return weighted_bincount_pallas(ids, vals, nbins,
                                     interpret=_interp(interpret))
+
+
+def weighted_bincount_batched(ids: jnp.ndarray, vals: jnp.ndarray,
+                              nbins: int,
+                              interpret: bool | None = None) -> jnp.ndarray:
+    """Batched histogram: out[i, b] = sum(vals[i][ids[i] == b]).
+
+    The batched analytics engine's global-reduction entry point: all N rows
+    are fused into ONE kernel launch by offsetting row i's ids into the
+    disjoint bin range ``[i * nbins, (i+1) * nbins)`` and histogramming the
+    flattened stream (same trick as packing corpora side by side in the
+    pre-planned pool).  Ids outside ``[0, nbins)`` are treated as padding
+    and ignored, exactly like the unbatched wrapper.
+    """
+    if ids.ndim != 2 or vals.shape != ids.shape:
+        raise ValueError(f"expected matching [N, T] inputs, got "
+                         f"{ids.shape} / {vals.shape}")
+    n, t = ids.shape
+    if n == 0 or t == 0:
+        return jnp.zeros((n, nbins), jnp.float32)
+    valid = (ids >= 0) & (ids < nbins)
+    offs = (jnp.arange(n, dtype=jnp.int32) * nbins)[:, None]
+    flat_ids = jnp.where(valid, ids + offs, -1).reshape(-1)
+    flat = weighted_bincount(flat_ids, vals.reshape(-1), n * nbins,
+                             interpret=interpret)
+    return flat.reshape(n, nbins)
 
 
 def ell_row_sums(weights: jnp.ndarray, src: jnp.ndarray, freq: jnp.ndarray,
@@ -45,8 +93,7 @@ def ell_row_sums(weights: jnp.ndarray, src: jnp.ndarray, freq: jnp.ndarray,
     """ELL gather row sums: the frontier-propagation hot loop."""
     if src.shape[0] == 0:
         return jnp.zeros(0, jnp.float32)
-    # full weight vector must fit VMEM (~16MB); fall back above ~3.5M rules
-    if weights.shape[0] > (3 << 20) or src.shape[0] < 64:
+    if ell_use_ref(weights.shape[0], src.shape[0]):
         return ref.ell_row_sums_ref(weights, src, freq)
     return ell_row_sums_pallas(weights, src, freq,
                                interpret=_interp(interpret))

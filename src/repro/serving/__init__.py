@@ -1,5 +1,8 @@
-"""Serving: batched KV-cache decode on top of models.decode_step."""
+"""Serving: batched KV-cache decode on top of models.decode_step, plus the
+query-dispatch layer for the batched multi-corpus analytics engine."""
 
 from .decode import make_serve_step, make_prefill_step, greedy_generate
+from .analytics_server import AnalyticsServer, Query, ServerStats
 
-__all__ = ["make_serve_step", "make_prefill_step", "greedy_generate"]
+__all__ = ["make_serve_step", "make_prefill_step", "greedy_generate",
+           "AnalyticsServer", "Query", "ServerStats"]

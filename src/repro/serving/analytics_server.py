@@ -1,0 +1,200 @@
+"""Query dispatch for the batched analytics engine.
+
+Serving shape of the workload: many registered compressed corpora, a stream
+of (corpus, analytics-kind) queries.  Running each query alone wastes the
+device (one dispatch + one compilation per corpus shape).  The server:
+
+1. groups incoming queries by analytics kind (and params, e.g. the l of
+   sequence_count);
+2. within a group, dedups corpora and orders them by grammar size so that
+   each chunk of ``max_batch`` packs corpora of similar size (minimal
+   padding waste — the bucketed :class:`GrammarBatch` dims round up to
+   powers of two, so similar sizes collapse onto one compiled program);
+3. executes ONE jitted batched call per chunk (``core.batch.run_batched``);
+4. answers duplicate queries for the same corpus from the chunk result, and
+   single-corpus chunks from the per-corpus path reusing the traversal
+   weights memoized on :class:`repro.data.CompressedCorpus`.
+
+``GrammarBatch`` packs are cached by corpus-id tuple, so a steady query mix
+pays the host-side packing once.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core import GrammarArrays, analytics as _analytics
+from repro.core.batch import ANALYTICS_KINDS, GrammarBatch, run_batched
+from repro.data.store import CompressedCorpus
+
+
+@dataclass(frozen=True)
+class Query:
+    """One analytics request against a registered corpus."""
+    corpus: str
+    kind: str                  # one of ANALYTICS_KINDS
+    l: int = 3                 # sequence_count only
+
+    def group_key(self) -> Tuple:
+        return (self.kind, self.l if self.kind == "sequence_count" else None)
+
+
+@dataclass
+class ServerStats:
+    queries: int = 0
+    groups: int = 0            # (kind, params) groups seen
+    batched_calls: int = 0     # jitted batched executions
+    single_calls: int = 0      # per-corpus executions (memoized weights)
+    batch_cache_hits: int = 0  # GrammarBatch packs reused
+    # distinct pad signatures -> batched-call count (bounded by the number
+    # of distinct bucket shapes, not by traffic volume)
+    signatures: Dict[Tuple[int, ...], int] = field(default_factory=dict)
+
+
+class AnalyticsServer:
+    """Groups (corpus, query) requests and runs them as batched programs."""
+
+    # methods every execution path (single and batched) supports
+    METHODS = ("frontier", "leveled")
+
+    def __init__(self, max_batch: int = 16, bucket: bool = True,
+                 method: str = "frontier", max_cached_batches: int = 32):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.max_batch = max_batch
+        self.bucket = bucket
+        if method == "auto":
+            method = "frontier"
+        if method not in self.METHODS:
+            raise ValueError(f"method must be one of {self.METHODS} (or "
+                             f"'auto'), got {method!r}")
+        self.method = method
+        if max_cached_batches < 1:
+            raise ValueError("max_cached_batches must be >= 1")
+        self.max_cached_batches = max_cached_batches
+        self._corpora: Dict[str, GrammarArrays] = {}
+        self._stores: Dict[str, CompressedCorpus] = {}
+        self._batches: Dict[Tuple[str, ...], GrammarBatch] = {}
+        self.stats = ServerStats()
+
+    # ---------------------------------------------------------- registry --
+    def register(self, name: str,
+                 corpus: Union[GrammarArrays, CompressedCorpus]) -> None:
+        """Register a compressed corpus under ``name``.  A
+        :class:`CompressedCorpus` additionally contributes its memoized
+        traversal weights to single-corpus execution."""
+        if not isinstance(corpus, (CompressedCorpus, GrammarArrays)):
+            raise TypeError(f"cannot register {type(corpus).__name__}")
+        # drop any previous registration: a stale store would hand its
+        # memoized weights to a different grammar
+        self._stores.pop(name, None)
+        if isinstance(corpus, CompressedCorpus):
+            self._stores[name] = corpus
+            self._corpora[name] = corpus.ga
+        else:
+            self._corpora[name] = corpus
+        # packs that contained an older corpus under this name are stale
+        self._batches = {k: v for k, v in self._batches.items()
+                         if name not in k}
+
+    def corpora(self) -> Tuple[str, ...]:
+        return tuple(self._corpora)
+
+    # ----------------------------------------------------------- serving --
+    def run(self, queries: Sequence[Query]) -> List:
+        """Execute all queries; results align with the input order and are
+        identical to calling the single-corpus analytics per query."""
+        for q in queries:
+            if q.kind not in ANALYTICS_KINDS:
+                raise ValueError(f"unknown analytics kind {q.kind!r}")
+            if q.corpus not in self._corpora:
+                raise KeyError(f"corpus {q.corpus!r} not registered")
+        self.stats.queries += len(queries)
+
+        # group by (kind, params), preserving first-seen order
+        groups: Dict[Tuple, List[int]] = {}
+        for i, q in enumerate(queries):
+            groups.setdefault(q.group_key(), []).append(i)
+
+        results: List = [None] * len(queries)
+        for key, idxs in groups.items():
+            self.stats.groups += 1
+            kind, l = key
+            names: List[str] = []
+            for i in idxs:
+                if queries[i].corpus not in names:
+                    names.append(queries[i].corpus)
+            by_corpus = self._run_group(kind, 3 if l is None else l, names)
+            for i in idxs:
+                results[i] = by_corpus[queries[i].corpus]
+        return results
+
+    # ---------------------------------------------------------- internals --
+    def _run_group(self, kind: str, l: int, names: List[str]) -> Dict:
+        # chunk corpora of similar grammar size together: padding in each
+        # pack is bounded by the size spread within the chunk.  Name is the
+        # tie-break so the chunking (and thus the pack-cache key) is
+        # canonical for a given corpus set regardless of query order.
+        order = sorted(names, key=lambda n: (self._corpora[n].num_rules, n))
+        out: Dict = {}
+        for s in range(0, len(order), self.max_batch):
+            chunk = order[s: s + self.max_batch]
+            if len(chunk) == 1:
+                out[chunk[0]] = self._run_single(kind, l, chunk[0])
+            else:
+                gb = self._get_batch(chunk)
+                vals = run_batched(gb, kind, method=self.method, l=l)
+                self.stats.batched_calls += 1
+                self.stats.signatures[gb.signature] = \
+                    self.stats.signatures.get(gb.signature, 0) + 1
+                out.update(zip(chunk, vals))
+        return out
+
+    def _get_batch(self, names: Sequence[str]) -> GrammarBatch:
+        key = tuple(names)
+        gb = self._batches.get(key)
+        if gb is not None:
+            self.stats.batch_cache_hits += 1
+            return gb
+        gb = GrammarBatch.build([self._corpora[n] for n in names],
+                                bucket=self.bucket)
+        while len(self._batches) >= self.max_cached_batches:
+            self._batches.pop(next(iter(self._batches)))   # FIFO eviction
+        self._batches[key] = gb
+        return gb
+
+    def _run_single(self, kind: str, l: int, name: str):
+        """Per-corpus path: reuses weights memoized on the corpus store."""
+        ga = self._corpora[name]
+        store = self._stores.get(name)
+        self.stats.single_calls += 1
+        m = self.method
+        # only run (and memoize) the traversal the query actually needs
+        w = wf = None
+        if store is not None:
+            if kind in ("word_count", "sort", "sequence_count"):
+                w = store.top_down_weights(m)
+            elif kind in ("term_vector", "inverted_index",
+                          "ranked_inverted_index"):
+                wf = store.per_file_weights(m)
+        if kind == "word_count":
+            return np.asarray(_analytics.word_count(ga, method=m, weights=w))
+        if kind == "sort":
+            o, c = _analytics.sort_words(ga, method=m, weights=w)
+            return (np.asarray(o), np.asarray(c))
+        if kind == "term_vector":
+            return np.asarray(_analytics.term_vector(ga, method=m,
+                                                     file_weights=wf))
+        if kind == "inverted_index":
+            return np.asarray(_analytics.inverted_index(ga, method=m,
+                                                        file_weights=wf))
+        if kind == "ranked_inverted_index":
+            r, c = _analytics.ranked_inverted_index(ga, method=m,
+                                                    file_weights=wf)
+            return (np.asarray(r), np.asarray(c))
+        if kind == "sequence_count":
+            return _analytics.sequence_count(ga, l=l, method=m, weights=w)
+        raise ValueError(f"unknown analytics kind {kind!r}")

@@ -1,7 +1,7 @@
 """The six TADOC analytics vs direct (decompressed) oracles (+property)."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (compress_files, flatten, word_count, sort_words,
                         term_vector, inverted_index, ranked_inverted_index,
@@ -51,6 +51,27 @@ def test_term_vector_sparse_path(rng):
     if len(ff):
         np.add.at(sp, (ff, ww), cc)
     assert np.allclose(sp, oracle)
+
+
+def test_term_vector_sparse_equals_dense_shared_subrules():
+    """COO triplets reassembled must match the dense [F, V] term vector on
+    corpora whose files share sub-rules (the same base phrase everywhere —
+    rules are referenced from many files, exercising the sparse frontier's
+    cross-file weight propagation)."""
+    rng = np.random.default_rng(17)
+    vocab = 50
+    base = rng.integers(0, vocab, 40)
+    files = [np.concatenate([base] * int(rng.integers(2, 5)) +
+                            [rng.integers(0, vocab, int(rng.integers(5, 30)))])
+             for _ in range(6)]
+    g, nf = compress_files(files, vocab)
+    ga = flatten(g, vocab, nf)
+    assert ga.num_rules > 1               # shared phrases made real sub-rules
+    dense = np.asarray(term_vector(ga))
+    ff, ww, cc = term_vector_sparse(ga)
+    sp = np.zeros_like(dense)
+    np.add.at(sp, (ff, ww), cc)
+    np.testing.assert_allclose(sp, dense, rtol=1e-6)
 
 
 def _oracle_ngrams(files, l):

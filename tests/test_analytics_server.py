@@ -1,0 +1,197 @@
+"""Query-dispatch layer: grouping, batching, memoization, correctness."""
+
+import numpy as np
+import pytest
+
+from repro.core import (compress_files, flatten, sequence_count, sort_words,
+                        term_vector, word_count)
+from repro.data import CompressedCorpus
+from repro.serving import AnalyticsServer, Query
+from conftest import make_repetitive_files
+
+
+def _make(rng, vocab, n_files):
+    files = make_repetitive_files(rng, vocab, n_files=n_files)
+    g, nf = compress_files(files, vocab)
+    return flatten(g, vocab, nf), files
+
+
+@pytest.fixture(scope="module")
+def server():
+    rng = np.random.default_rng(11)
+    srv = AnalyticsServer(max_batch=4)
+    gas = {}
+    for i, (vocab, n_files) in enumerate([(10, 2), (25, 3), (60, 4),
+                                          (18, 1), (35, 5)]):
+        ga, _ = _make(rng, vocab, n_files)
+        name = f"c{i}"
+        srv.register(name, ga)
+        gas[name] = ga
+    return srv, gas
+
+
+def test_mixed_queries_match_single_corpus(server):
+    srv, gas = server
+    queries = [
+        Query("c0", "word_count"),
+        Query("c2", "term_vector"),
+        Query("c1", "word_count"),
+        Query("c0", "word_count"),          # duplicate: shares the result
+        Query("c3", "sort"),
+        Query("c4", "sequence_count", l=3),
+        Query("c2", "word_count"),
+        Query("c1", "sequence_count", l=3),
+    ]
+    res = srv.run(queries)
+    assert len(res) == len(queries)
+    np.testing.assert_allclose(res[0], np.asarray(word_count(gas["c0"])))
+    np.testing.assert_allclose(res[1], np.asarray(term_vector(gas["c2"])))
+    np.testing.assert_allclose(res[2], np.asarray(word_count(gas["c1"])))
+    np.testing.assert_allclose(res[3], res[0])
+    o, c = sort_words(gas["c3"])
+    assert np.array_equal(res[4][0], np.asarray(o))
+    np.testing.assert_allclose(res[4][1], np.asarray(c))
+    for name, r in (("c4", res[5]), ("c1", res[7])):
+        g_s, c_s = sequence_count(gas[name], l=3, method="frontier")
+        assert np.array_equal(r[0], g_s)
+        np.testing.assert_allclose(r[1], c_s, rtol=1e-6)
+    np.testing.assert_allclose(res[6], np.asarray(word_count(gas["c2"])))
+
+
+def test_grouping_batches_queries(server):
+    srv, gas = server
+    before = srv.stats.batched_calls
+    srv.run([Query(f"c{i}", "word_count") for i in range(4)])
+    # 4 distinct corpora, one kind, max_batch=4 -> exactly one batched call
+    assert srv.stats.batched_calls == before + 1
+
+
+def test_batch_pack_cache(server):
+    srv, gas = server
+    queries = [Query(f"c{i}", "word_count") for i in range(4)]
+    srv.run(queries)
+    before = srv.stats.batch_cache_hits
+    srv.run(queries)
+    assert srv.stats.batch_cache_hits > before
+
+
+def test_single_corpus_uses_memoized_store_weights():
+    rng = np.random.default_rng(3)
+    files = make_repetitive_files(rng, vocab=15, n_files=2)
+    cc = CompressedCorpus.build(files, vocab_size=15)
+    assert cc.cached_weight_keys() == ()
+    srv = AnalyticsServer(max_batch=16)
+    srv.register("solo", cc)
+    r1 = srv.run([Query("solo", "word_count")])[0]
+    assert ("top_down", "frontier") in cc.cached_weight_keys()
+    w_cached = cc.top_down_weights("frontier")
+    assert cc.top_down_weights("frontier") is w_cached      # memoized
+    r2 = srv.run([Query("solo", "word_count")])[0]
+    np.testing.assert_allclose(r1, r2)
+    np.testing.assert_allclose(r1, np.asarray(word_count(cc.ga)))
+    cc.clear_weight_cache()
+    assert cc.cached_weight_keys() == ()
+
+
+def test_unknown_corpus_and_kind(server):
+    srv, _ = server
+    with pytest.raises(KeyError):
+        srv.run([Query("nope", "word_count")])
+    with pytest.raises(ValueError):
+        srv.run([Query("c0", "nope")])
+
+
+def test_method_validated_and_leveled_served():
+    rng = np.random.default_rng(13)
+    ga, files = _make(rng, 20, 2)
+    with pytest.raises(ValueError):
+        AnalyticsServer(method="frontier_ell")   # not batched-capable
+    srv = AnalyticsServer(method="auto")         # coerced to frontier
+    assert srv.method == "frontier"
+    srv_lv = AnalyticsServer(method="leveled")
+    ga2, _ = _make(rng, 25, 3)
+    srv_lv.register("a", ga)
+    srv_lv.register("b", ga2)
+    res = srv_lv.run([Query("a", "word_count"),      # batched leveled pair
+                      Query("b", "word_count"),
+                      Query("a", "term_vector")])    # single-corpus leveled
+    np.testing.assert_allclose(res[0], np.asarray(word_count(ga)))
+    np.testing.assert_allclose(res[1], np.asarray(word_count(ga2)))
+    np.testing.assert_allclose(res[2], np.asarray(term_vector(ga)))
+    assert srv_lv.stats.batched_calls == 1 and srv_lv.stats.single_calls == 1
+
+
+def test_failed_register_leaves_prior_registration_intact():
+    rng = np.random.default_rng(14)
+    files = make_repetitive_files(rng, vocab=12, n_files=2)
+    cc = CompressedCorpus.build(files, vocab_size=12)
+    srv = AnalyticsServer()
+    srv.register("x", cc)
+    with pytest.raises(TypeError):
+        srv.register("x", np.zeros(3))           # invalid type
+    # prior store (and its memoization fast path) must survive
+    srv.run([Query("x", "word_count")])
+    assert ("top_down", "frontier") in cc.cached_weight_keys()
+
+
+def test_reregister_drops_stale_store_weights():
+    """Replacing a CompressedCorpus with a bare GrammarArrays under the
+    same name must not serve the old store's memoized weights."""
+    rng = np.random.default_rng(8)
+    files_a = make_repetitive_files(rng, vocab=12, n_files=2)
+    cc = CompressedCorpus.build(files_a, vocab_size=12)
+    srv = AnalyticsServer()
+    srv.register("x", cc)
+    srv.run([Query("x", "word_count")])          # memoizes cc's weights
+    ga_b, files_b = _make(rng, 12, 2)
+    srv.register("x", ga_b)                      # plain arrays, same name
+    got = srv.run([Query("x", "word_count")])[0]
+    np.testing.assert_allclose(got, np.asarray(word_count(ga_b)))
+
+
+def test_single_query_memoizes_only_needed_traversal():
+    rng = np.random.default_rng(9)
+    files = make_repetitive_files(rng, vocab=14, n_files=2)
+    cc = CompressedCorpus.build(files, vocab_size=14)
+    srv = AnalyticsServer()
+    srv.register("y", cc)
+    srv.run([Query("y", "word_count")])
+    assert cc.cached_weight_keys() == (("top_down", "frontier"),)
+    srv.run([Query("y", "term_vector")])
+    assert ("per_file", "frontier") in cc.cached_weight_keys()
+    # sequence_count reuses the memoized top-down weights
+    g1, c1 = srv.run([Query("y", "sequence_count", l=3)])[0]
+    g2, c2 = sequence_count(cc.ga, l=3, method="frontier")
+    assert np.array_equal(g1, g2)
+    np.testing.assert_allclose(c1, c2, rtol=1e-6)
+
+
+def test_constructor_validation():
+    with pytest.raises(ValueError):
+        AnalyticsServer(max_batch=0)
+    with pytest.raises(ValueError):
+        AnalyticsServer(max_cached_batches=0)
+
+
+def test_invalid_sequence_length_raises(server):
+    srv, _ = server
+    with pytest.raises(ValueError):           # same contract as direct API
+        srv.run([Query("c0", "sequence_count", l=0)])
+
+
+def test_pack_cache_is_bounded_and_order_canonical():
+    rng = np.random.default_rng(7)
+    srv = AnalyticsServer(max_batch=2, max_cached_batches=2)
+    for i in range(6):
+        ga, _ = _make(rng, 10 + i, 2)
+        srv.register(f"b{i}", ga)
+    # same corpus pair queried in either order must hit one cached pack
+    srv.run([Query("b0", "word_count"), Query("b1", "word_count")])
+    before = srv.stats.batch_cache_hits
+    srv.run([Query("b1", "word_count"), Query("b0", "word_count")])
+    assert srv.stats.batch_cache_hits == before + 1
+    # cache never exceeds its bound
+    for i in range(0, 6, 2):
+        srv.run([Query(f"b{i}", "word_count"),
+                 Query(f"b{i + 1}", "word_count")])
+    assert len(srv._batches) <= 2

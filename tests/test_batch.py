@@ -1,0 +1,179 @@
+"""Batched multi-corpus engine == per-corpus sequential loop (property)."""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import (GrammarBatch, batched_per_file_weights,
+                        batched_ranked_inverted_index, batched_sequence_count,
+                        batched_sort_words, batched_term_vector,
+                        batched_top_down_weights, batched_word_count,
+                        compress_files, flatten, inverted_index,
+                        per_file_weights, ranked_inverted_index, run_batched,
+                        sequence_count, sort_words, term_vector,
+                        top_down_weights, word_count)
+from conftest import make_repetitive_files
+
+
+def _build_corpus(rng, vocab, n_files, size):
+    phrase = rng.integers(0, vocab, int(rng.integers(3, 9)))
+    files = []
+    for _ in range(n_files):
+        parts, total = [], 0
+        while total < size:
+            p = (phrase if rng.random() < 0.5
+                 else rng.integers(0, vocab, int(rng.integers(2, 12))))
+            parts.append(p)
+            total += len(p)
+        files.append(np.concatenate(parts)[:size] if parts
+                     else np.zeros(0, np.int64))
+    g, nf = compress_files(files, vocab)
+    return flatten(g, vocab, nf), files, vocab
+
+
+def _ragged_batch(rng):
+    """>= 4 corpora with wildly different R / V / F, incl. an empty one."""
+    specs = [(7, 1, 40), (50, 4, 300), (400, 6, 900), (15, 2, 120),
+             (30, 3, 0)]                       # last corpus: empty files
+    return [_build_corpus(rng, *s) for s in specs]
+
+
+@pytest.fixture(scope="module")
+def ragged():
+    rng = np.random.default_rng(42)
+    built = _ragged_batch(rng)
+    gas = [b[0] for b in built]
+    return GrammarBatch.build(gas), built
+
+
+def test_batched_weights_match_sequential(ragged):
+    gb, built = ragged
+    for method in ("frontier", "leveled"):
+        w = np.asarray(batched_top_down_weights(gb, method=method))
+        for i, (ga, _, _) in enumerate(built):
+            want = np.asarray(top_down_weights(ga, method=method))
+            np.testing.assert_allclose(w[i, : ga.num_rules], want,
+                                       rtol=1e-6, err_msg=f"corpus {i}")
+            assert (w[i, ga.num_rules:] == 0).all()     # padding untouched
+
+
+def test_batched_per_file_weights_match(ragged):
+    gb, built = ragged
+    for method in ("frontier", "leveled"):
+        Wf = np.asarray(batched_per_file_weights(gb, method=method))
+        for i, (ga, _, _) in enumerate(built):
+            want = np.asarray(per_file_weights(ga, method="frontier"))
+            np.testing.assert_allclose(
+                Wf[i, : ga.num_rules, : ga.num_files], want, rtol=1e-6,
+                err_msg=f"{method} corpus {i}")
+    with pytest.raises(ValueError):
+        batched_per_file_weights(gb, method="nope")
+
+
+def test_batched_word_count_and_sort(ragged):
+    gb, built = ragged
+    wc = np.asarray(batched_word_count(gb))
+    wc_pallas = np.asarray(batched_word_count(gb, backend="pallas"))
+    srt = batched_sort_words(gb)
+    for i, (ga, files, V) in enumerate(built):
+        oracle = np.bincount(np.concatenate(files).astype(np.int64),
+                             minlength=V) if any(len(f) for f in files) \
+            else np.zeros(V)
+        np.testing.assert_allclose(wc[i, :V], oracle)
+        np.testing.assert_allclose(wc_pallas[i, :V], oracle, atol=1e-4)
+        o_s, c_s = sort_words(ga)
+        assert np.array_equal(np.asarray(srt[i][0]), np.asarray(o_s))
+        np.testing.assert_allclose(np.asarray(srt[i][1]), np.asarray(c_s))
+
+
+def test_batched_term_vector_and_indexes(ragged):
+    gb, built = ragged
+    tv = np.asarray(batched_term_vector(gb))
+    for i, (ga, files, V) in enumerate(built):
+        want = np.asarray(term_vector(ga))
+        got = tv[i, : ga.num_files, :V]
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+        assert ((got > 0) == np.asarray(inverted_index(ga))).all()
+    ranked = batched_ranked_inverted_index(gb)
+    for i, (ga, _, _) in enumerate(built):
+        r_s, c_s = ranked_inverted_index(ga)
+        assert np.array_equal(np.asarray(ranked[i][0]), np.asarray(r_s))
+        np.testing.assert_allclose(np.asarray(ranked[i][1]),
+                                   np.asarray(c_s))
+
+
+@pytest.mark.parametrize("l", [2, 3])
+def test_batched_sequence_count(ragged, l):
+    gb, built = ragged
+    got = batched_sequence_count(gb, l=l)
+    for i, (ga, _, _) in enumerate(built):
+        g_s, c_s = sequence_count(ga, l=l, method="frontier")
+        assert np.array_equal(got[i][0], g_s), f"corpus {i}"
+        np.testing.assert_allclose(got[i][1], c_s, rtol=1e-6)
+    # host-side planning is memoized per (batch, l) and stays correct
+    assert l in gb._plan_cache
+    again = batched_sequence_count(gb, l=l)
+    for i in range(gb.n):
+        assert np.array_equal(again[i][0], got[i][0])
+        np.testing.assert_allclose(again[i][1], got[i][1])
+
+
+def test_batch_size_one():
+    rng = np.random.default_rng(1)
+    files = make_repetitive_files(rng, vocab=20, n_files=3)
+    g, nf = compress_files(files, 20)
+    ga = flatten(g, 20, nf)
+    gb = GrammarBatch.build([ga])
+    assert gb.n == 1
+    np.testing.assert_allclose(
+        np.asarray(batched_word_count(gb))[0, :20], np.asarray(word_count(ga)))
+    got = batched_sequence_count(gb, l=3)[0]
+    want = sequence_count(ga, l=3, method="frontier")
+    assert np.array_equal(got[0], want[0])
+    np.testing.assert_allclose(got[1], want[1], rtol=1e-6)
+
+
+def test_bucketing_reuses_signature():
+    """The padded signature is set by the largest corpus (rounded to power
+    of two), so swapping the small corpora of a batch must not change it —
+    that is what lets the dispatch layer reuse one compiled program."""
+    rng = np.random.default_rng(5)
+    big = _build_corpus(rng, 200, 5, 800)[0]
+    small_a = _build_corpus(rng, 10, 2, 60)[0]
+    small_b = _build_corpus(rng, 12, 1, 80)[0]
+    sig_a = GrammarBatch.build([big, small_a]).signature
+    sig_b = GrammarBatch.build([big, small_b]).signature
+    assert sig_a == sig_b
+    # bucketed dims are powers of two
+    from repro.core.batch import _round_up_pow2
+    for x, want in [(1, 8), (8, 8), (9, 16), (1000, 1024)]:
+        assert _round_up_pow2(x) == want
+
+
+def test_run_batched_all_kinds(ragged):
+    gb, built = ragged
+    for kind in ("word_count", "sort", "inverted_index", "term_vector",
+                 "sequence_count", "ranked_inverted_index"):
+        res = run_batched(gb, kind)
+        assert len(res) == gb.n
+    with pytest.raises(ValueError):
+        run_batched(gb, "nope")
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 100_000))
+def test_property_batched_equals_loop(seed):
+    rng = np.random.default_rng(seed)
+    n = 4 + int(rng.integers(0, 3))
+    built = [_build_corpus(rng, int(rng.integers(5, 120)),
+                           int(rng.integers(1, 5)),
+                           int(rng.integers(0, 300))) for _ in range(n)]
+    gas = [b[0] for b in built]
+    gb = GrammarBatch.build(gas)
+    wc = np.asarray(batched_word_count(gb))
+    tv = np.asarray(batched_term_vector(gb))
+    for i, (ga, files, V) in enumerate(built):
+        np.testing.assert_allclose(wc[i, :V], np.asarray(word_count(ga)),
+                                   rtol=1e-5)
+        np.testing.assert_allclose(tv[i, : ga.num_files, :V],
+                                   np.asarray(term_vector(ga)), rtol=1e-5)

@@ -3,7 +3,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ops, ref
 from repro.kernels.bincount import weighted_bincount_pallas
@@ -82,6 +82,74 @@ def test_ell_propagate_end_to_end(rng):
     want = np.zeros(R)
     np.add.at(want, np.asarray(dst), sums)
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+# ------------------------------------------------------ fallback branches --
+def test_bincount_empty_input():
+    got = ops.weighted_bincount(jnp.zeros(0, jnp.int32),
+                                jnp.zeros(0, jnp.float32), 7)
+    assert got.shape == (7,) and (np.asarray(got) == 0).all()
+
+
+def test_ell_empty_input():
+    got = ops.ell_row_sums(jnp.ones(5, jnp.float32),
+                           jnp.zeros((0, 3), jnp.int32),
+                           jnp.zeros((0, 3), jnp.float32))
+    assert got.shape == (0,)
+
+
+@pytest.mark.parametrize("n,v", [(1, 100), (63, 100), (200, 7), (5, 3)])
+def test_bincount_small_shape_fallback(n, v, rng):
+    """< 64 elements or < 8 bins must route to (and agree with) the ref."""
+    assert ops.bincount_use_ref(n, v)
+    ids = jnp.asarray(rng.integers(0, v, n).astype(np.int32))
+    vals = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    got = ops.weighted_bincount(ids, vals, v)
+    want = ref.weighted_bincount_ref(ids, vals, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@pytest.mark.parametrize("rows", [1, 63])
+def test_ell_small_shape_fallback(rows, rng):
+    assert ops.ell_use_ref(50, rows)
+    src = jnp.asarray(rng.integers(0, 50, (rows, 4)).astype(np.int32))
+    freq = jnp.asarray(rng.integers(0, 3, (rows, 4)).astype(np.float32))
+    wts = jnp.asarray(rng.normal(size=50).astype(np.float32))
+    got = ops.ell_row_sums(wts, src, freq)
+    want = ref.ell_row_sums_ref(wts, src, freq)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_ell_vmem_fallback_size_check_only():
+    """> 3.5M-rule weight vectors must route to the jnp ref (VMEM limit).
+    Pure size-check on the dispatch predicate — no giant allocation."""
+    limit = ops.ELL_VMEM_WEIGHT_LIMIT
+    assert ops.ell_use_ref(limit + 1, 1000)
+    assert ops.ell_use_ref(100 * limit, 1 << 20)
+    assert not ops.ell_use_ref(limit, 1000)       # at the limit: kernel OK
+    assert not ops.ell_use_ref(1000, 1000)
+
+
+def test_bincount_batched_matches_per_row(rng):
+    ids = rng.integers(0, 40, (5, 300)).astype(np.int32)
+    ids[2, 10:20] = -1                            # padding entries ignored
+    vals = rng.normal(size=(5, 300)).astype(np.float32)
+    got = np.asarray(ops.weighted_bincount_batched(
+        jnp.asarray(ids), jnp.asarray(vals), 40))
+    assert got.shape == (5, 40)
+    for i in range(5):
+        want = np.asarray(ref.weighted_bincount_ref(
+            jnp.asarray(ids[i]), jnp.asarray(vals[i]), 40))
+        np.testing.assert_allclose(got[i], want, rtol=1e-4, atol=1e-4)
+
+
+def test_bincount_batched_empty_and_bad_shapes():
+    assert ops.weighted_bincount_batched(
+        jnp.zeros((3, 0), jnp.int32), jnp.zeros((3, 0), jnp.float32),
+        5).shape == (3, 5)
+    with pytest.raises(ValueError):
+        ops.weighted_bincount_batched(jnp.zeros((3, 4), jnp.int32),
+                                      jnp.zeros((3, 5), jnp.float32), 5)
 
 
 @settings(max_examples=15, deadline=None)
