@@ -6,6 +6,12 @@ serving story: one jitted call per corpus (each with its own shapes, its
 own dispatch).  The batched mode packs all corpora into one
 :class:`GrammarBatch` and runs ONE program.  Steady-state timing (both
 modes fully warmed/compiled before measurement).
+
+Also emits ``batch/traversal/{segment_sum,ell,ell_speedup}``: the batched
+frontier rounds on the COO segment_sum path vs the dense ELL edge plan
+(scatter-free gather form — core/batch.py DESIGN note).  ``run`` returns
+the full timing dict; ``benchmarks.run`` serializes it to BENCH_batch.json
+so CI tracks the perf trajectory across PRs.
 """
 
 from __future__ import annotations
@@ -16,8 +22,8 @@ import jax
 import numpy as np
 
 from repro.core import (GrammarArrays, GrammarBatch, batched_term_vector,
-                        batched_word_count, compress_files, flatten,
-                        term_vector, word_count)
+                        batched_top_down_weights, batched_word_count,
+                        compress_files, flatten, term_vector, word_count)
 
 from .common import emit, timeit
 
@@ -64,7 +70,7 @@ def run(smoke: bool = False) -> dict:
     def bat_term_vector():
         jax.block_until_ready(batched_term_vector(gb))
 
-    out = {}
+    out = {"n": n, "batched_vs_sequential": {}, "ell_vs_segment_sum": {}}
     for app, seq, bat in (("word_count", seq_word_count, bat_word_count),
                           ("term_vector", seq_term_vector, bat_term_vector)):
         t_seq = timeit(seq, repeat=3, warmup=1)
@@ -73,7 +79,26 @@ def run(smoke: bool = False) -> dict:
         emit(f"batch/{app}/sequential", t_seq, f"n={n}")
         emit(f"batch/{app}/batched", t_bat, f"n={n}")
         emit(f"batch/{app}/speedup", 0.0, f"{speedup:.2f}x")
-        out[app] = speedup
+        out["batched_vs_sequential"][app] = {
+            "sequential_us": t_seq * 1e6, "batched_us": t_bat * 1e6,
+            "speedup": speedup}
+
+    def trav_seg():
+        jax.block_until_ready(batched_top_down_weights(gb, method="frontier"))
+
+    def trav_ell():
+        jax.block_until_ready(
+            batched_top_down_weights(gb, method="frontier_ell"))
+
+    t_seg = timeit(trav_seg, repeat=3, warmup=1)
+    t_ell = timeit(trav_ell, repeat=3, warmup=1)
+    ell_speedup = t_seg / max(t_ell, 1e-12)
+    emit("batch/traversal/segment_sum", t_seg, f"n={n}")
+    emit("batch/traversal/ell", t_ell, f"n={n}")
+    emit("batch/traversal/ell_speedup", 0.0, f"{ell_speedup:.2f}x")
+    out["ell_vs_segment_sum"] = {
+        "segment_sum_us": t_seg * 1e6, "ell_us": t_ell * 1e6,
+        "speedup": ell_speedup}
     return out
 
 

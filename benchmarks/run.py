@@ -14,7 +14,17 @@ benchmark harness still executes end to end).
 
 from __future__ import annotations
 
+import json
 import sys
+
+
+def _write_batch_json(data: dict, path: str = "BENCH_batch.json") -> None:
+    """Persist the batch-engine timings (batched vs sequential, ELL vs
+    segment_sum) — CI uploads this as an artifact to track the perf
+    trajectory across PRs."""
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+    print(f"wrote {path}", flush=True)
 
 
 def main() -> None:
@@ -24,7 +34,7 @@ def main() -> None:
     from . import bench_batch
 
     if smoke:
-        bench_batch.run(smoke=True)
+        _write_batch_json(bench_batch.run(smoke=True))
         return
 
     datasets = ("D", "R") if quick else ("A", "B", "D", "R")
@@ -35,7 +45,7 @@ def main() -> None:
     bench_phases.run(datasets)
     bench_traversal.run(datasets)
     bench_pipeline.run(("D", "R") if quick else ("B", "R"))
-    bench_batch.run()
+    _write_batch_json(bench_batch.run())
 
     # roofline summary (reads dry-run artifacts if the sweep has run)
     try:

@@ -28,6 +28,22 @@ masked by ``edge_valid``; padded rule slots have ``in_deg == out_deg == 0``
 Dimensions are bucketed (rounded up to powers of two) so batches of similar
 size hit the same compiled program — the dispatch layer
 (serving/analytics_server.py) groups queries by this signature.
+
+DESIGN — the ELL edge plan (methods ``frontier_ell`` / ``leveled_ell``):
+:meth:`GrammarBatch.ell_plan` converts each corpus's COO in-edges to a
+dense ``src/freq [N, R_pad, K]`` layout (row r = rule r's parents, K = max
+in-degree across the batch bucketed to a power of two, padding src=0 /
+freq=0).  Because the row index IS the destination rule, one propagation
+round needs no scatter: ``kernels.ops.ell_propagate_batched`` fuses the
+gather, mask-gate, multiply and row-sum — and emits the ``seen`` frontier
+bookkeeping — in a single launch (two segment_sum scatters per round on
+the COO path).  The plan is built lazily and memoized per batch; method
+``auto`` asks ``kernels.ops.ell_batched_use_ref`` (occupancy over edge
+count, plan width K, batch width N) whether the dense plan pays off.  The
+leveled variant replays the same plan once per level with the mask
+``level[parent] == lv`` — each real edge still contributes exactly once,
+at its parent's level.  Per-file traversals keep the segment_sum path
+(their payload is a [R, F] vector per rule; the ELL kernels are scalar).
 """
 
 from __future__ import annotations
@@ -41,7 +57,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .grammar import GrammarArrays
+from .grammar import GrammarArrays, pow2_bucket as _pow2_bucket
 from . import sequence as _sequence
 from .sequence import _K_HEAD, _K_LIT, _K_TAIL
 
@@ -124,6 +140,51 @@ class GrammarBatch:
         ``lv_slices`` for the leveled engine) reuse jitted programs."""
         return (self.n, self.R_pad, self.E_pad, self.T_pad, self.F_pad,
                 self.V_pad, int(self.fedge_file.shape[1]), self.Tf_pad)
+
+    @property
+    def total_edges(self) -> int:
+        """True (unpadded) edge count across the batch (memoized: the
+        dispatch runs per batched call on cached packs)."""
+        if ("edges",) not in self._plan_cache:
+            self._plan_cache[("edges",)] = sum(ga.num_edges
+                                               for ga in self.gas)
+        return self._plan_cache[("edges",)]
+
+    def ell_plan_width(self) -> int:
+        """K of the dense ELL plan (max in-degree across the batch, bucketed
+        to a power of two) — host-only and memoized: lets the auto dispatch
+        reject the plan before building it, on every call, for free."""
+        if ("ell_width",) not in self._plan_cache:
+            kmax = max((int(ga.in_deg.max(initial=0)) for ga in self.gas),
+                       default=0)
+            self._plan_cache[("ell_width",)] = _pow2_bucket(kmax)
+        return self._plan_cache[("ell_width",)]
+
+    def ell_plan(self) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, int]:
+        """Dense [N, R_pad, K] in-edge plan + per-rule levels (memoized).
+
+        Returns ``(src, freq, level, num_levels)``: src/freq are the padded
+        per-corpus :meth:`GrammarArrays.in_edges_ell_dense` plans stacked to
+        a shared K, ``level[i, r]`` is corpus i's rule level (-1 on padded
+        rule slots — never active in the leveled replay), and num_levels the
+        shared (max) level count.  Built lazily: packs that never run an ELL
+        method never pay the dense layout.
+        """
+        key = ("ell",)
+        if key not in self._plan_cache:
+            K = self.ell_plan_width()
+            src = np.zeros((self.n, self.R_pad, K), np.int32)
+            freq = np.zeros((self.n, self.R_pad, K), np.float32)
+            level = np.full((self.n, self.R_pad), -1, np.int32)
+            for i, ga in enumerate(self.gas):
+                s, f = ga.in_edges_ell_dense(k=K)
+                src[i, : ga.num_rules] = s
+                freq[i, : ga.num_rules] = f
+                level[i, : ga.num_rules] = ga.level
+            self._plan_cache[key] = (
+                jnp.asarray(src), jnp.asarray(freq), jnp.asarray(level),
+                max(ga.num_levels for ga in self.gas))
+        return self._plan_cache[key]
 
     # ------------------------------------------------------------ build --
     @classmethod
@@ -280,16 +341,88 @@ def _leveled_weights_batched(ep, ec, ef, slices, R):
     return w
 
 
+@jax.jit
+def _frontier_weights_batched_ell(ell_src, ell_freq, in_deg):
+    """Masked frontier rounds over the dense ELL plan: every round is ONE
+    fused gather + row-sum (no scatter), with delta and the seen-counter
+    emitted by the same kernels.ops.ell_propagate_batched call."""
+    from repro.kernels import ops as kops
+
+    N, R = in_deg.shape
+
+    def cond(state):
+        _, _, mask, _ = state
+        return jnp.any(mask)
+
+    def body(state):
+        weight, cur_in, mask, ever = state
+        delta, seen = kops.ell_propagate_batched(
+            weight, mask.astype(jnp.float32), ell_src, ell_freq)
+        weight = weight + delta
+        cur_in = cur_in + seen.astype(jnp.int32)
+        new_ready = (cur_in == in_deg) & (~ever)
+        return weight, cur_in, new_ready, ever | new_ready
+
+    weight0 = jnp.zeros((N, R), jnp.float32).at[:, 0].set(1.0)
+    mask0 = (in_deg == 0)
+    state = (weight0, jnp.zeros((N, R), jnp.int32), mask0, mask0)
+    weight, _, _, _ = jax.lax.while_loop(cond, body, state)
+    return weight
+
+
+@functools.partial(jax.jit, static_argnames=("num_levels",))
+def _leveled_weights_batched_ell(ell_src, ell_freq, level, num_levels):
+    """Static level schedule over the dense ELL plan: level lv's round
+    activates exactly the parents at that level, so each real edge
+    contributes once, at its parent's level (padded slots: level -1)."""
+    from repro.kernels import ops as kops
+
+    N, R = level.shape
+    w = jnp.zeros((N, R), jnp.float32).at[:, 0].set(1.0)
+    for lv in range(num_levels):
+        active = (level == lv).astype(jnp.float32)
+        delta, _ = kops.ell_propagate_batched(w, active, ell_src, ell_freq)
+        w = w + delta
+    return w
+
+
 def batched_top_down_weights(gb: GrammarBatch,
                              method: str = "frontier") -> jnp.ndarray:
-    """weights[i, r] == occurrences of corpus i's rule r. Shape [N, R_pad]."""
-    if method in ("frontier", "auto", "top_down", "bottom_up"):
+    """weights[i, r] == occurrences of corpus i's rule r. Shape [N, R_pad].
+
+    Methods: ``frontier`` / ``leveled`` (COO + segment_sum),
+    ``frontier_ell`` / ``leveled_ell`` (dense ELL plan, scatter-free), and
+    ``auto`` (occupancy dispatch via kernels.ops.ell_batched_use_ref).
+    """
+    if method == "auto":
+        from repro.kernels import ops as kops
+        method = ("frontier" if kops.ell_batched_use_ref(
+            gb.total_edges, gb.n, gb.R_pad, gb.ell_plan_width())
+            else "frontier_ell")
+    if method in ("frontier_ell", "leveled_ell"):
+        from repro.kernels import ops as kops
+        K = gb.ell_plan_width()
+        if (K > kops.ELL_BATCH_MAX_WIDTH
+                or gb.n * gb.R_pad * K > kops.ELL_PLAN_MAX_ENTRIES):
+            # safety valve even when ELL is requested explicitly: a skewed
+            # grammar (hub rule with huge in-degree) or a huge sparse one
+            # (many rules x a moderate hub's K) would make the dense plan
+            # O(N * R_pad * K) memory — fall back to the segment_sum base
+            # (identical results).
+            method = "frontier" if method == "frontier_ell" else "leveled"
+    if method in ("frontier", "top_down", "bottom_up"):
         return _frontier_weights_batched(
             gb.edge_parent, gb.edge_child, gb.edge_freq, gb.edge_valid,
             gb.in_deg)
     if method == "leveled":
         return _leveled_weights_batched(
             gb.lv_parent, gb.lv_child, gb.lv_freq, gb.lv_slices, gb.R_pad)
+    if method == "frontier_ell":
+        src, freq, _, _ = gb.ell_plan()
+        return _frontier_weights_batched_ell(src, freq, gb.in_deg)
+    if method == "leveled_ell":
+        src, freq, level, num_levels = gb.ell_plan()
+        return _leveled_weights_batched_ell(src, freq, level, num_levels)
     raise ValueError(f"unknown batched traversal method {method!r}")
 
 
@@ -350,7 +483,14 @@ def _per_file_leveled_batched(ep, ec, ef, fedge_child, fedge_file,
 
 def batched_per_file_weights(gb: GrammarBatch,
                              method: str = "frontier") -> jnp.ndarray:
-    """Wf[i, r, f] == occurrences of rule r inside file f of corpus i."""
+    """Wf[i, r, f] == occurrences of rule r inside file f of corpus i.
+
+    The ELL methods map to their segment_sum bases here: the per-file
+    payload is a [R, F] vector per rule and the ELL kernels are scalar
+    (see module DESIGN note).
+    """
+    method = {"frontier_ell": "frontier", "leveled_ell": "leveled"}.get(
+        method, method)
     if method in ("frontier", "auto", "top_down", "bottom_up"):
         return _per_file_weights_batched(
             gb.edge_parent, gb.edge_child, gb.edge_freq, gb.edge_valid,

@@ -30,6 +30,14 @@ import numpy as np
 from .sequitur import Grammar
 
 
+def pow2_bucket(x: int) -> int:
+    """Smallest power of two >= max(x, 1): the ELL plan-width bucketing
+    (shared with core/batch.py so batch packs agree on K; semantically
+    identical to kernels._common.round_up_pow2 — kept separate only so the
+    host-planning layer does not import the kernels package)."""
+    return 1 << max(0, (max(int(x), 1) - 1).bit_length())
+
+
 @dataclass(frozen=True)
 class GrammarArrays:
     """Static flat layout of a TADOC grammar (all numpy, host-resident)."""
@@ -91,53 +99,41 @@ class GrammarArrays:
         return sym - self.num_terminals
 
     # ------------------------------------------------------- ELL layout --
-    def in_edges_ell(self, split_threshold_mult: float = 16.0
-                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
-        """Pad per-child in-edge lists to a uniform width (ELL format).
+    def in_edges_ell_dense(self, k: int | None = None
+                           ) -> Tuple[np.ndarray, np.ndarray]:
+        """Dense per-rule in-edge plan: row r lists rule r's in-edges.
 
-        G-TADOC's load balancing assigns *groups* of threads to oversized
-        rules, with a threshold of 16x the mean elements/thread (§IV-B).  On
-        TPU, load becomes static shape: rows wider than
-        ``16 x mean_in_degree`` are split into multiple ELL rows that
-        accumulate into the same output slot (the "thread group" analogue).
+        Returns ``(src, freq)`` shaped ``[R, K]`` with K the max in-degree
+        rounded up to a power of two (>= 1; pass ``k`` to pad to a shared
+        batch width).  Padding entries are src=0 / freq=0: the root has no
+        in-edges and ``freq == 0`` gates padding out of every kernel.
 
-        Returns ``(src, freq, dst, width)`` with ``src/freq`` shaped
-        ``[rows, width]`` (padded with src=0, freq=0) and ``dst[rows]`` the
-        output rule each row accumulates into.
+        There is no row splitting — the row index IS the destination rule,
+        so a propagation round is a pure gather + row-sum with no scatter
+        (kernels/propagate_batched.py).  The paper's 16x thread-group
+        threshold for oversized rules (§IV-B) becomes the width gate in the
+        traversal engines: grammars whose max in-degree exceeds
+        ``kernels.ops.ELL_BATCH_MAX_WIDTH`` fall back to segment_sum
+        instead of splitting rows.
         """
-        order = np.argsort(self.edge_child, kind="stable")
-        child = self.edge_child[order]
-        parent = self.edge_parent[order]
-        freq = self.edge_freq[order]
-        deg = np.bincount(child, minlength=self.num_rules)
-        mean_deg = max(1.0, float(deg[deg > 0].mean()) if (deg > 0).any() else 1.0)
-        width = int(min(max(deg.max(initial=1), 1),
-                        max(8, int(round(split_threshold_mult * mean_deg)))))
-        width = max(1, width)
-        rows_src: List[np.ndarray] = []
-        rows_freq: List[np.ndarray] = []
-        rows_dst: List[int] = []
-        pos = 0
-        for r in range(self.num_rules):
-            d = int(deg[r])
-            if d == 0:
-                continue
-            p = parent[pos: pos + d]
-            f = freq[pos: pos + d]
-            pos += d
-            for s in range(0, d, width):
-                seg_p = p[s: s + width]
-                seg_f = f[s: s + width]
-                pad = width - len(seg_p)
-                rows_src.append(np.pad(seg_p, (0, pad)))
-                rows_freq.append(np.pad(seg_f, (0, pad)))
-                rows_dst.append(r)
-        if not rows_dst:
-            return (np.zeros((0, width), np.int32), np.zeros((0, width), np.int32),
-                    np.zeros((0,), np.int32), width)
-        return (np.stack(rows_src).astype(np.int32),
-                np.stack(rows_freq).astype(np.int32),
-                np.array(rows_dst, np.int32), width)
+        R = self.num_rules
+        deg = self.in_deg.astype(np.int64)
+        kmax = int(deg.max(initial=0))
+        if k is None:
+            k = pow2_bucket(kmax)
+        elif k < kmax:
+            raise ValueError(f"k={k} narrower than max in-degree {kmax}")
+        src = np.zeros((R, k), np.int32)
+        freq = np.zeros((R, k), np.float32)
+        if self.num_edges:
+            order = np.argsort(self.edge_child, kind="stable")
+            child = self.edge_child[order]
+            starts = np.zeros(R + 1, np.int64)
+            np.cumsum(deg, out=starts[1:])
+            col = np.arange(self.num_edges) - starts[child]
+            src[child, col] = self.edge_parent[order]
+            freq[child, col] = self.edge_freq[order]
+        return src, freq
 
     # ---------------------------------------------------- level buckets --
     def level_edge_slices(self) -> List[Tuple[int, int]]:

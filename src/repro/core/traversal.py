@@ -25,13 +25,14 @@ Both produce bit-identical results (tests/test_traversal.py).
 from __future__ import annotations
 
 import functools
+import weakref
 from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .grammar import GrammarArrays
+from .grammar import GrammarArrays, pow2_bucket as _pow2_bucket
 
 
 # ----------------------------------------------------------------------- #
@@ -78,7 +79,9 @@ def top_down_weights(ga: GrammarArrays, method: str = "frontier") -> jnp.ndarray
             jnp.asarray(ga.edge_parent), jnp.asarray(ga.edge_child),
             jnp.asarray(ga.edge_freq), jnp.asarray(ga.in_deg), ga.num_rules)
         return w
-    if method == "leveled":
+    if method in ("leveled", "leveled_ell"):
+        # single-corpus leveled: the per-level segments are already gathers
+        # over tiny slices; the dense ELL replay only pays off batched.
         return _top_down_leveled(ga)
     if method == "frontier_ell":
         return _top_down_frontier_ell(ga)
@@ -86,50 +89,41 @@ def top_down_weights(ga: GrammarArrays, method: str = "frontier") -> jnp.ndarray
 
 
 def _top_down_frontier_ell(ga: GrammarArrays) -> jnp.ndarray:
-    """Masked frontier rounds with the Pallas ELL propagate kernel.
+    """Masked frontier rounds over the dense per-rule ELL plan.
 
-    Identical schedule to ``frontier``; the per-round edge scan runs through
-    ``kernels.ops.ell_propagate`` (the paper's topDownKernel hot loop on the
-    MXU/VPU).  Mask gating is folded into the gathered weight vector.
+    The N=1 case of core/batch.py's ``_frontier_weights_batched_ell`` —
+    the jitted loop (and its compilation cache) is shared with the batched
+    engine; each round is ONE fused ``kernels.ops.ell_propagate_batched``
+    call with no scatter (row index == destination rule).  The blocked
+    kernels stream weight vectors of any size through VMEM, so there is no
+    rule-count cliff (the old ELL_VMEM_WEIGHT_LIMIT).  Skewed grammars
+    whose plan width would exceed ELL_BATCH_MAX_WIDTH take the COO
+    frontier instead (the dense plan is O(R * K) memory).
     """
     from repro.kernels import ops as kops
+    from .batch import _frontier_weights_batched_ell
 
-    key = ("ell", id(ga), ga.num_rules, ga.num_edges)
-    if key in _ENGINE_CACHE:
-        return _ENGINE_CACHE[key]()
-    src, freq, dst, _w = ga.in_edges_ell()
-    R = ga.num_rules
-    srcj = jnp.asarray(src)
-    freqj = jnp.asarray(freq.astype(np.float32))
-    dstj = jnp.asarray(dst)
-    in_deg = jnp.asarray(ga.in_deg)
-    # ones-ELL for counting how many in-edges became visible this round
-    ones = jnp.asarray((freq > 0).astype(np.float32))
+    K = _pow2_bucket(int(ga.in_deg.max(initial=0)))
+    if (K > kops.ELL_BATCH_MAX_WIDTH
+            or ga.num_rules * K > kops.ELL_PLAN_MAX_ENTRIES):
+        w, _ = _top_down_frontier(
+            jnp.asarray(ga.edge_parent), jnp.asarray(ga.edge_child),
+            jnp.asarray(ga.edge_freq), jnp.asarray(ga.in_deg), ga.num_rules)
+        return w
 
-    @jax.jit
-    def run():
-        def cond(state):
-            _, _, mask, _ = state
-            return jnp.any(mask)
-
-        def body(state):
-            weight, cur_in, mask, ever = state
-            wm = jnp.where(mask, weight, 0.0)
-            delta = kops.ell_propagate(wm, srcj, freqj, dstj, R)
-            seenf = kops.ell_propagate(mask.astype(jnp.float32), srcj, ones,
-                                       dstj, R)
-            weight = weight + delta
-            cur_in = cur_in + seenf.astype(jnp.int32)
-            new_ready = (cur_in == in_deg) & (~ever)
-            return weight, cur_in, new_ready, ever | new_ready
-
-        weight0 = jnp.zeros(R, jnp.float32).at[0].set(1.0)
-        mask0 = (in_deg == 0)
-        state = (weight0, jnp.zeros(R, jnp.int32), mask0, mask0)
-        weight, _, _, _ = jax.lax.while_loop(cond, body, state)
-        return weight
-
-    return run()
+    key = ("ell", id(ga))
+    entry = _ENGINE_CACHE.get(key)
+    if entry is None:
+        src, freq = ga.in_edges_ell_dense()
+        entry = (jnp.asarray(src)[None],           # [1, R, K]
+                 jnp.asarray(freq)[None],
+                 jnp.asarray(ga.in_deg)[None])     # [1, R]
+        _ENGINE_CACHE[key] = entry
+        # evict when ga dies: id() values are recycled, and a same-id key
+        # must never serve another grammar's plan
+        weakref.finalize(ga, _ENGINE_CACHE.pop, key, None)
+    srcj, freqj, in_deg = entry
+    return _frontier_weights_batched_ell(srcj, freqj, in_deg)[0]
 
 
 _ENGINE_CACHE: Dict = {}
@@ -137,7 +131,7 @@ _ENGINE_CACHE: Dict = {}
 
 def _top_down_leveled(ga: GrammarArrays) -> jnp.ndarray:
     """Leveled top-down: each edge processed exactly once (static schedule)."""
-    key = ("leveled", id(ga), ga.num_rules, ga.num_edges)
+    key = ("leveled", id(ga))
     if key in _ENGINE_CACHE:
         run, args = _ENGINE_CACHE[key]
         return run(*args)
@@ -159,6 +153,9 @@ def _top_down_leveled(ga: GrammarArrays) -> jnp.ndarray:
         return weight
 
     _ENGINE_CACHE[key] = (run, (ep, ec, ef))
+    # evict when ga dies: id() values are recycled, and a same-id key must
+    # never serve another grammar's schedule (same scheme as frontier_ell)
+    weakref.finalize(ga, _ENGINE_CACHE.pop, key, None)
     return run(ep, ec, ef)
 
 
@@ -174,6 +171,10 @@ def per_file_weights(ga: GrammarArrays, method: str = "frontier") -> jnp.ndarray
     depend on the propagated payload — so the paper's Algorithm 1 carries
     over with a batched weight vector.
     """
+    # ELL methods keep their segment_sum bases here: the payload is a
+    # [R, F] vector per rule and the ELL kernels are scalar.
+    method = {"frontier_ell": "frontier", "leveled_ell": "leveled"}.get(
+        method, method)
     R, F = ga.num_rules, ga.num_files
     ep = jnp.asarray(ga.edge_parent)
     ec = jnp.asarray(ga.edge_child)

@@ -1,5 +1,11 @@
-# Pallas TPU kernels for the paper's two compute hot spots:
-#   bincount.py  — global result reduction (replaces §IV-C atomic hash tables)
-#   propagate.py — ELL frontier propagation (replaces §IV-B per-thread rule walk)
-# ops.py: jit'd wrappers (auto interpret on CPU); ref.py: pure-jnp oracles.
+# Pallas TPU kernels for the paper's compute hot spots:
+#   bincount.py          — global result reduction (replaces §IV-C atomic
+#                          hash tables)
+#   propagate.py         — ELL row sums with blocked weight streaming
+#                          (replaces §IV-B per-thread rule walk)
+#   propagate_batched.py — fused batched ELL propagation round (delta+seen
+#                          in one launch over the [N, R, K] edge plan)
+# ops.py: jit'd wrappers + ELL-vs-segment_sum dispatch (auto interpret on
+# CPU); ref.py: pure-jnp oracles (and the fast CPU production path for the
+# batched ELL plan).
 from . import ops, ref  # noqa: F401

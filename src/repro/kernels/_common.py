@@ -1,0 +1,13 @@
+"""Shared kernel tiling constants and helpers (one source of truth — the
+propagate kernels' chunking must stay in sync with each other)."""
+
+from __future__ import annotations
+
+DEFAULT_BR = 256        # rows per block (sublane-dim multiple of 8)
+DEFAULT_WC = 1 << 19    # weight-chunk length (f32 => 2 MB VMEM per chunk)
+
+
+def round_up_pow2(x: int) -> int:
+    """Smallest power of two >= max(x, 1).  Kept semantically identical to
+    core.grammar.pow2_bucket (no cross-layer import: kernels stay leaf)."""
+    return 1 << max(0, (max(int(x), 1) - 1).bit_length())

@@ -1,16 +1,30 @@
-"""Jit'd public wrappers for the Pallas kernels.
+"""Jit'd public wrappers + dispatch layer for the Pallas kernels.
 
 ``interpret`` defaults to auto: real lowering on TPU, interpret mode on CPU
-(the assignment's validation mode).  Both wrappers fall back to the jnp
+(the assignment's validation mode).  Wrappers fall back to the jnp
 reference for degenerate shapes where a kernel launch is pure overhead; the
-dispatch predicates are exposed (``bincount_use_ref`` / ``ell_use_ref``) so
-tests can assert the routing — including the VMEM-limit branch — without
-allocating the big inputs that trigger it.
+dispatch predicates are exposed (``bincount_use_ref`` / ``ell_use_ref`` /
+``ell_batched_use_ref`` / ``bincount_batch_rows``) so tests can assert the
+routing without allocating the big inputs that trigger it.
+
+DESIGN — ELL vs segment_sum dispatch: the batched traversal engine
+(core/batch.py) asks ``ell_batched_use_ref`` whether a round should run on
+the dense ``[N, R, K]`` ELL edge plan (gather form, no scatter — see
+propagate_batched.py) or stay on the COO segment_sum path.  The predicate
+is an occupancy model over (edge count, plan width K — the max in/out fan
+bucketed to a power of two, batch width N): very sparse or very wide plans
+waste K-proportional work, tiny batches never amortize a launch.  Within
+``ell_propagate_batched`` the second routing decision is platform-shaped:
+TPU lowers the Pallas kernel; CPU production traffic takes the jnp form of
+the same plan (interpret-mode emulation is pure overhead — interpret=True
+remains available as the validation oracle).
+
+The old ``ELL_VMEM_WEIGHT_LIMIT`` hard fallback is gone: both ELL kernels
+stream the weight vector through VMEM in chunks (grid-blocked), so weight
+size no longer routes anything.
 """
 
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -18,14 +32,25 @@ import jax.numpy as jnp
 from . import ref
 from .bincount import weighted_bincount_pallas
 from .propagate import ell_row_sums_pallas
+from .propagate_batched import ell_propagate_batched_pallas
 
 # Below these sizes a kernel launch is pure overhead.
 BINCOUNT_MIN_N = 64
 BINCOUNT_MIN_BINS = 8
 ELL_MIN_ROWS = 64
-# The ELL kernel keeps the whole weight vector VMEM-resident (~16 MB);
-# above ~3.5M rules it cannot fit and the jnp reference takes over.
-ELL_VMEM_WEIGHT_LIMIT = 3 << 20
+# weighted_bincount_batched flattens [N, T] ids into N*nbins disjoint bins;
+# above this flat-bin count the batch is chunked instead (huge vocabularies
+# would otherwise allocate N*V scratch bins for one [N, V] result).
+BINCOUNT_BATCH_FLAT_LIMIT = 1 << 22
+# Batched ELL-plan occupancy gates (see module docstring).
+ELL_BATCH_MIN_ROWS = 64
+ELL_BATCH_MAX_WIDTH = 2048
+ELL_BATCH_MIN_FILL = 1.0 / 256.0
+# Absolute dense-plan budget (N * rows * K entries, ~1 GB of src+freq at the
+# limit): the safety valve for *explicit* ELL requests — a huge sparse
+# grammar with one moderate hub rule passes the width gate yet would
+# allocate an O(R * K) plan far beyond its COO size.
+ELL_PLAN_MAX_ENTRIES = 1 << 27
 
 
 def bincount_use_ref(n: int, nbins: int) -> bool:
@@ -33,18 +58,64 @@ def bincount_use_ref(n: int, nbins: int) -> bool:
     return n < BINCOUNT_MIN_N or nbins < BINCOUNT_MIN_BINS
 
 
+def bincount_batch_rows(n: int, nbins: int) -> int:
+    """Rows per flattened chunk for weighted_bincount_batched.
+
+    == n (no chunking) while n*nbins stays under BINCOUNT_BATCH_FLAT_LIMIT;
+    above it, the largest row count whose flat bin range fits the limit
+    (>= 1 — a single row degenerates to the per-row kernel)."""
+    if n * nbins <= BINCOUNT_BATCH_FLAT_LIMIT:
+        return n
+    return max(1, BINCOUNT_BATCH_FLAT_LIMIT // nbins)
+
+
 def ell_use_ref(num_weights: int, rows: int) -> bool:
-    """True when ell_row_sums should route to the jnp reference (small
-    shapes, or weight vectors too large for VMEM)."""
-    return num_weights > ELL_VMEM_WEIGHT_LIMIT or rows < ELL_MIN_ROWS
+    """True when ell_row_sums should route to the jnp reference.
+
+    Only tiny row counts route away now; ``num_weights`` is kept for API
+    compatibility but no longer matters — the blocked kernel streams weight
+    vectors of any size through VMEM chunks (propagate.py)."""
+    del num_weights
+    return rows < ELL_MIN_ROWS
 
 
-@functools.lru_cache(None)
+def ell_batched_use_ref(num_edges: int, n: int, rows: int, k: int) -> bool:
+    """True when a batched propagation round should stay on segment_sum.
+
+    Occupancy dispatch for the dense [N, rows, K] ELL plan: reject tiny
+    batches (launch overhead), very wide plans (K beyond any realistic
+    in-degree bucket), and plans so sparse that the K-padded gather does
+    >256x the real edge work."""
+    if n * rows < ELL_BATCH_MIN_ROWS:
+        return True
+    if k > ELL_BATCH_MAX_WIDTH:
+        return True
+    fill = num_edges / max(n * rows * k, 1)
+    return fill < ELL_BATCH_MIN_FILL
+
+
+_BACKEND_CACHE: dict = {}
+
+
 def _on_tpu() -> bool:
-    try:
-        return jax.devices()[0].platform == "tpu"
-    except Exception:  # pragma: no cover
-        return False
+    """Cached backend probe.  NOT an lru_cache: tests monkeypatch the jax
+    backend, and a process-lifetime cache would leak the first answer
+    across them — reset_backend_cache() makes the memo revocable."""
+    if "on_tpu" not in _BACKEND_CACHE:
+        try:
+            _BACKEND_CACHE["on_tpu"] = jax.devices()[0].platform == "tpu"
+        except Exception:  # pragma: no cover
+            _BACKEND_CACHE["on_tpu"] = False
+    return _BACKEND_CACHE["on_tpu"]
+
+
+def reset_backend_cache() -> None:
+    """Drop the memoized backend probe (call after changing jax backends).
+
+    Caveat: routing decisions are made at trace time, so programs that are
+    already jit-compiled keep whatever branch they baked in — also call
+    ``jax.clear_caches()`` if compiled routing must change too."""
+    _BACKEND_CACHE.clear()
 
 
 def _interp(interpret) -> bool:
@@ -67,12 +138,17 @@ def weighted_bincount_batched(ids: jnp.ndarray, vals: jnp.ndarray,
                               interpret: bool | None = None) -> jnp.ndarray:
     """Batched histogram: out[i, b] = sum(vals[i][ids[i] == b]).
 
-    The batched analytics engine's global-reduction entry point: all N rows
-    are fused into ONE kernel launch by offsetting row i's ids into the
+    The batched analytics engine's global-reduction entry point: rows are
+    fused into ONE kernel launch by offsetting row i's ids into the
     disjoint bin range ``[i * nbins, (i+1) * nbins)`` and histogramming the
     flattened stream (same trick as packing corpora side by side in the
     pre-planned pool).  Ids outside ``[0, nbins)`` are treated as padding
     and ignored, exactly like the unbatched wrapper.
+
+    Huge vocabularies would make the flat bin range N*nbins blow up, so the
+    batch is processed in row chunks of ``bincount_batch_rows(n, nbins)``
+    (each chunk's flat range stays under BINCOUNT_BATCH_FLAT_LIMIT; a
+    single-row chunk degenerates to the per-row kernel).
     """
     if ids.ndim != 2 or vals.shape != ids.shape:
         raise ValueError(f"expected matching [N, T] inputs, got "
@@ -80,12 +156,22 @@ def weighted_bincount_batched(ids: jnp.ndarray, vals: jnp.ndarray,
     n, t = ids.shape
     if n == 0 or t == 0:
         return jnp.zeros((n, nbins), jnp.float32)
-    valid = (ids >= 0) & (ids < nbins)
-    offs = (jnp.arange(n, dtype=jnp.int32) * nbins)[:, None]
-    flat_ids = jnp.where(valid, ids + offs, -1).reshape(-1)
-    flat = weighted_bincount(flat_ids, vals.reshape(-1), n * nbins,
-                             interpret=interpret)
-    return flat.reshape(n, nbins)
+
+    def flat_chunk(ids_c: jnp.ndarray, vals_c: jnp.ndarray) -> jnp.ndarray:
+        rows = ids_c.shape[0]
+        valid = (ids_c >= 0) & (ids_c < nbins)
+        offs = (jnp.arange(rows, dtype=jnp.int32) * nbins)[:, None]
+        flat_ids = jnp.where(valid, ids_c + offs, -1).reshape(-1)
+        flat = weighted_bincount(flat_ids, vals_c.reshape(-1), rows * nbins,
+                                 interpret=interpret)
+        return flat.reshape(rows, nbins)
+
+    rows = bincount_batch_rows(n, nbins)
+    if rows >= n:
+        return flat_chunk(ids, vals)
+    return jnp.concatenate(
+        [flat_chunk(ids[s: s + rows], vals[s: s + rows])
+         for s in range(0, n, rows)], axis=0)
 
 
 def ell_row_sums(weights: jnp.ndarray, src: jnp.ndarray, freq: jnp.ndarray,
@@ -99,13 +185,25 @@ def ell_row_sums(weights: jnp.ndarray, src: jnp.ndarray, freq: jnp.ndarray,
                                interpret=_interp(interpret))
 
 
-def ell_propagate(weights: jnp.ndarray, src: jnp.ndarray, freq: jnp.ndarray,
-                  dst: jnp.ndarray, num_rules: int,
-                  interpret: bool | None = None) -> jnp.ndarray:
-    """delta[child] += freq * weights[parent]: one full propagation round.
+def ell_propagate_batched(weights: jnp.ndarray, active: jnp.ndarray,
+                          src: jnp.ndarray, freq: jnp.ndarray,
+                          interpret: bool | None = None):
+    """One fused propagation round over the dense [N, rows, K] ELL plan.
 
-    ``weights`` should already be mask-gated (weight * active) — see
-    propagate.py docstring.
+    Returns ``(delta, seen)`` — both [N, rows] float32; see
+    propagate_batched.py for the exact semantics.  Routing: TPU lowers the
+    Pallas kernel; on CPU (interpret=None) the jnp form of the same plan is
+    the production path, and interpret=True forces the interpret-mode
+    kernel as the validation oracle.
     """
-    sums = ell_row_sums(weights, src, freq, interpret=interpret)
-    return jax.ops.segment_sum(sums, dst, num_segments=num_rules)
+    if src.ndim != 3 or freq.shape != src.shape:
+        raise ValueError(f"expected matching [N, rows, K] plans, got "
+                         f"{src.shape} / {freq.shape}")
+    n, rows, k = src.shape
+    if n == 0 or rows == 0 or k == 0:
+        z = jnp.zeros((n, rows), jnp.float32)
+        return z, z
+    if interpret is None and not _on_tpu():
+        return ref.ell_propagate_batched_ref(weights, active, src, freq)
+    return ell_propagate_batched_pallas(weights, active, src, freq,
+                                        interpret=_interp(interpret))

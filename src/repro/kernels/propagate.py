@@ -1,22 +1,27 @@
-"""Pallas TPU kernel: ELL frontier propagation (the traversal hot spot).
+"""Pallas TPU kernel: ELL gather row sums (single-corpus form).
 
-One masked round of the paper's ``topDownKernel`` (Algorithm 1) is, per
-in-edge of each rule, ``delta[child] += freq * weight[parent]`` for parents
-active this round.  grammar.py lays in-edges out in ELL format — uniform
-width rows, oversized rules split across rows (the paper's 16x thread-group
-threshold becomes row splitting, DESIGN.md §2) — so a round is:
+The generic building block
 
-  row_sums[row] = sum_k freq[row, k] * weight[src[row, k]]      (this kernel)
-  delta         = segment_sum(row_sums, dst)                    (ops.py)
+  row_sums[row] = sum_k freq[row, k] * weight[src[row, k]]
 
-Masking is folded into the input: the wrapper passes ``weight * mask`` so
-inactive parents contribute zero — the mask never enters the kernel.
+over a uniform-width ELL layout (padding: src=0, freq=0).  Masking is
+folded into the input: callers pass ``weight * mask`` so inactive sources
+contribute zero — the mask never enters the kernel.  The traversal engines
+run the fused per-rule variant (propagate_batched.py, where the row index
+IS the destination rule); this kernel remains the scalar row-sums surface.
 
-The gather ``weight[src]`` runs from a VMEM-resident copy of the full weight
-vector (BlockSpec maps the whole vector into every grid step; the grammar's
-rule count must fit VMEM — ~4M rules at f32.  Beyond that the wrapper falls
-back to the jnp path.)  Gathers from VMEM lower via Mosaic's dynamic-gather
-support; we validate through ``interpret=True`` on CPU per the assignment.
+DESIGN — blocked weight streaming: the gather ``weight[src]`` used to run
+from a single VMEM-resident copy of the full weight vector, capping the
+grammar at ~3.5M rules (the old ``ELL_VMEM_WEIGHT_LIMIT`` hard fallback in
+ops.py).  The kernel is now tiled over a second grid dimension of
+weight *chunks*: grid step (i, j) gathers block i's rows from weight chunk
+``[j*wc, (j+1)*wc)`` only, masking out-of-chunk sources to zero, and
+accumulates into the same output block (revisiting grid dimension — the
+out BlockSpec depends only on i, with init at j == 0).  Every source index
+falls in exactly one chunk, so the chunk sweep partitions the row sum and
+arbitrarily large weight vectors stream through a fixed VMEM footprint.
+Gathers from VMEM lower via Mosaic's dynamic-gather support; we validate
+through ``interpret=True`` on CPU per the assignment.
 """
 
 from __future__ import annotations
@@ -27,42 +32,59 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ._common import DEFAULT_BR, DEFAULT_WC, round_up_pow2
 
-DEFAULT_BR = 256   # rows per block (sublane-dim multiple of 8)
 
+def _kernel(w_ref, src_ref, freq_ref, out_ref, *, wc: int):
+    j = pl.program_id(1)                 # weight-chunk index (innermost)
 
-def _kernel(w_ref, src_ref, freq_ref, out_ref):
-    w = w_ref[0, :]                      # [R] full weight vector (VMEM)
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    base = j * wc
+    w = w_ref[0, :]                      # [wc] weight chunk (VMEM)
     src = src_ref[...]                   # [BR, W]
     freq = freq_ref[...]                 # [BR, W] float32
-    gathered = jnp.take(w, src.reshape(-1), axis=0).reshape(src.shape)
-    out_ref[...] = (gathered * freq).sum(axis=1, keepdims=True)  # [BR, 1]
+    loc = src - base
+    in_chunk = (loc >= 0) & (loc < wc)
+    idx = jnp.clip(loc, 0, wc - 1).reshape(-1)
+    gathered = jnp.take(w, idx, axis=0).reshape(src.shape)
+    gated = jnp.where(in_chunk, freq, 0.0)
+    out_ref[...] += (gathered * gated).sum(axis=1, keepdims=True)  # [BR, 1]
 
 
-@functools.partial(jax.jit, static_argnames=("br", "interpret"))
+@functools.partial(jax.jit, static_argnames=("br", "wc", "interpret"))
 def ell_row_sums_pallas(weights: jnp.ndarray, src: jnp.ndarray,
                         freq: jnp.ndarray, br: int = DEFAULT_BR,
+                        wc: int = DEFAULT_WC,
                         interpret: bool = True) -> jnp.ndarray:
     """row_sums[r] = sum_k freq[r, k] * weights[src[r, k]].
 
-    src/freq: [rows, W] ELL arrays (padding: src=0, freq=0).
+    src/freq: [rows, W] ELL arrays (padding: src=0, freq=0).  ``wc`` is the
+    VMEM weight-chunk length; weight vectors of any size are streamed
+    through it (small vectors collapse to a single chunk).
     """
     rows, w = src.shape
     pad = (-rows) % br
     src_p = jnp.pad(src.astype(jnp.int32), ((0, pad), (0, 0)))
     freq_p = jnp.pad(freq.astype(jnp.float32), ((0, pad), (0, 0)))
     rtot = rows + pad
-    wvec = weights.astype(jnp.float32)[None, :]      # [1, R]
+    R = weights.shape[0]
+    wc = min(wc, round_up_pow2(R))
+    wpad = (-R) % wc
+    wvec = jnp.pad(weights.astype(jnp.float32), (0, wpad))[None, :]  # [1, Wt]
+    wtot = R + wpad
 
     out = pl.pallas_call(
-        _kernel,
-        grid=(rtot // br,),
+        functools.partial(_kernel, wc=wc),
+        grid=(rtot // br, wtot // wc),
         in_specs=[
-            pl.BlockSpec((1, wvec.shape[1]), lambda i: (0, 0)),  # full weights
-            pl.BlockSpec((br, w), lambda i: (i, 0)),
-            pl.BlockSpec((br, w), lambda i: (i, 0)),
+            pl.BlockSpec((1, wc), lambda i, j: (0, j)),   # weight chunk
+            pl.BlockSpec((br, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((br, w), lambda i, j: (i, 0)),
         ],
-        out_specs=pl.BlockSpec((br, 1), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec((br, 1), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rtot, 1), jnp.float32),
         interpret=interpret,
     )(wvec, src_p, freq_p)

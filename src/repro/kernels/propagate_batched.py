@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: fused batched ELL propagation (one round, one launch).
+
+DESIGN — the dense ELL *edge plan* (see also core/batch.py): the batched
+engine lays every corpus's in-edges out as ``src/freq [N, R, K]`` where row
+``r`` of corpus ``n`` lists the parents of rule ``r`` (K = max in-degree
+across the batch, bucketed to a power of two; padding is src=0 / freq=0).
+Because the row index IS the destination rule, one masked round of the
+paper's ``topDownKernel`` collapses to a pure gather + row-sum with no
+scatter at all:
+
+  delta[n, r] = sum_k freq[n, r, k] * weight[n, src[n, r, k]]
+                                    * active[n, src[n, r, k]]
+  seen[n, r]  = sum_k [freq[n, r, k] > 0] * active[n, src[n, r, k]]
+
+``delta`` is the weight update and ``seen`` the per-rule count of in-edges
+that became visible this round (the frontier bookkeeping) — both emitted by
+the SAME launch, so the gather of ``src`` is paid once per round instead of
+twice (the segment_sum path runs two scatters per round).
+
+Grid = (corpus, row-block, weight-chunk): the weight/active vectors stream
+through VMEM in ``wc``-length chunks exactly like propagate.py (out blocks
+depend only on (n, i); chunk j is the innermost revisiting dimension with
+init at j == 0), so rule counts beyond the old ``ELL_VMEM_WEIGHT_LIMIT``
+hold no cliff.  Gathers lower via Mosaic dynamic-gather; CPU validation
+runs through ``interpret=True`` (ops.py routes CPU *production* traffic to
+the jnp form of the same plan — interpret-mode emulation is pure overhead).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ._common import DEFAULT_BR, DEFAULT_WC, round_up_pow2
+
+
+def _kernel(w_ref, a_ref, src_ref, freq_ref, delta_ref, seen_ref, *, wc: int):
+    j = pl.program_id(2)                 # weight-chunk index (innermost)
+
+    @pl.when(j == 0)
+    def _init():
+        delta_ref[...] = jnp.zeros_like(delta_ref)
+        seen_ref[...] = jnp.zeros_like(seen_ref)
+
+    base = j * wc
+    w = w_ref[0, :]                      # [wc] weight chunk
+    a = a_ref[0, :]                      # [wc] active-mask chunk (0/1 float)
+    src = src_ref[0]                     # [BR, K]
+    freq = freq_ref[0]                   # [BR, K] float32
+    loc = src - base
+    in_chunk = (loc >= 0) & (loc < wc)
+    idx = jnp.clip(loc, 0, wc - 1).reshape(-1)
+    gw = jnp.take(w, idx, axis=0).reshape(src.shape)
+    gact = jnp.take(a, idx, axis=0).reshape(src.shape)
+    gact = jnp.where(in_chunk, gact, 0.0)
+    delta_ref[...] += (freq * gw * gact).sum(axis=-1)[None, :]
+    seen_ref[...] += jnp.where(freq > 0, gact, 0.0).sum(axis=-1)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("br", "wc", "interpret"))
+def ell_propagate_batched_pallas(weights: jnp.ndarray, active: jnp.ndarray,
+                                 src: jnp.ndarray, freq: jnp.ndarray,
+                                 br: int = DEFAULT_BR, wc: int = DEFAULT_WC,
+                                 interpret: bool = True):
+    """(delta, seen) of one fused propagation round over the [N, R, K] plan.
+
+    weights/active: [N, R] float32; src/freq: [N, rows, K] (rows == R for
+    the per-rule plan, but any row count works).  Returns two [N, rows]
+    float32 arrays.
+    """
+    n, rows, k = src.shape
+    pad = (-rows) % br
+    src_p = jnp.pad(src.astype(jnp.int32), ((0, 0), (0, pad), (0, 0)))
+    freq_p = jnp.pad(freq.astype(jnp.float32), ((0, 0), (0, pad), (0, 0)))
+    rtot = rows + pad
+    R = weights.shape[1]
+    wc = min(wc, round_up_pow2(R))
+    wpad = (-R) % wc
+    w_p = jnp.pad(weights.astype(jnp.float32), ((0, 0), (0, wpad)))
+    a_p = jnp.pad(active.astype(jnp.float32), ((0, 0), (0, wpad)))
+    wtot = R + wpad
+
+    delta, seen = pl.pallas_call(
+        functools.partial(_kernel, wc=wc),
+        grid=(n, rtot // br, wtot // wc),
+        in_specs=[
+            pl.BlockSpec((1, wc), lambda c, i, j: (c, j)),    # weight chunk
+            pl.BlockSpec((1, wc), lambda c, i, j: (c, j)),    # active chunk
+            pl.BlockSpec((1, br, k), lambda c, i, j: (c, i, 0)),
+            pl.BlockSpec((1, br, k), lambda c, i, j: (c, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, br), lambda c, i, j: (c, i)),
+            pl.BlockSpec((1, br), lambda c, i, j: (c, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, rtot), jnp.float32),
+            jax.ShapeDtypeStruct((n, rtot), jnp.float32),
+        ],
+        interpret=interpret,
+    )(w_p, a_p, src_p, freq_p)
+    return delta[:, :rows], seen[:, :rows]

@@ -21,3 +21,27 @@ def ell_row_sums_ref(weights: jnp.ndarray, src: jnp.ndarray,
     """row_sums[r] = sum_k freq[r, k] * weights[src[r, k]]."""
     return (weights.astype(jnp.float32)[src] *
             freq.astype(jnp.float32)).sum(axis=1)
+
+
+def ell_propagate_batched_ref(weights: jnp.ndarray, active: jnp.ndarray,
+                              src: jnp.ndarray, freq: jnp.ndarray):
+    """(delta, seen) of one fused round over the [N, R, K] edge plan.
+
+    delta[n, r] = sum_k freq[n,r,k] * weights[n, src[n,r,k]]
+                                    * active[n, src[n,r,k]]
+    seen[n, r]  = sum_k [freq[n,r,k] > 0] * active[n, src[n,r,k]]
+
+    This gather form doubles as the fast CPU production path: it touches
+    each plan entry once with no scatter (the segment_sum path runs two
+    scatters per round), which is also why the ELL plan wins on CPU.
+    """
+    n = src.shape[0]
+    flat = src.reshape(n, -1).astype(jnp.int32)
+    w = weights.astype(jnp.float32)
+    a = active.astype(jnp.float32)
+    f = freq.astype(jnp.float32)
+    gw = jnp.take_along_axis(w, flat, axis=1).reshape(src.shape)
+    ga = jnp.take_along_axis(a, flat, axis=1).reshape(src.shape)
+    delta = (f * gw * ga).sum(axis=-1)
+    seen = jnp.where(f > 0, ga, 0.0).sum(axis=-1)
+    return delta, seen

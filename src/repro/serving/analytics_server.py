@@ -57,8 +57,14 @@ class ServerStats:
 class AnalyticsServer:
     """Groups (corpus, query) requests and runs them as batched programs."""
 
-    # methods every execution path (single and batched) supports
-    METHODS = ("frontier", "leveled")
+    # methods every execution path (single and batched) supports; the
+    # *_ell variants run the batched traversal on the dense ELL edge plan
+    # (core/batch.py DESIGN note) and "auto" lets the occupancy dispatch in
+    # kernels.ops pick ELL vs segment_sum per pack.
+    METHODS = ("frontier", "leveled", "frontier_ell", "leveled_ell", "auto")
+    # per-corpus traversal used when a chunk degenerates to one corpus
+    # ("auto" resolves per pack; singles take the plain frontier)
+    _SINGLE_METHOD = {"auto": "frontier"}
 
     def __init__(self, max_batch: int = 16, bucket: bool = True,
                  method: str = "frontier", max_cached_batches: int = 32):
@@ -66,11 +72,9 @@ class AnalyticsServer:
             raise ValueError("max_batch must be >= 1")
         self.max_batch = max_batch
         self.bucket = bucket
-        if method == "auto":
-            method = "frontier"
         if method not in self.METHODS:
-            raise ValueError(f"method must be one of {self.METHODS} (or "
-                             f"'auto'), got {method!r}")
+            raise ValueError(f"method must be one of {self.METHODS}, "
+                             f"got {method!r}")
         self.method = method
         if max_cached_batches < 1:
             raise ValueError("max_cached_batches must be >= 1")
@@ -171,7 +175,7 @@ class AnalyticsServer:
         ga = self._corpora[name]
         store = self._stores.get(name)
         self.stats.single_calls += 1
-        m = self.method
+        m = self._SINGLE_METHOD.get(self.method, self.method)
         # only run (and memoize) the traversal the query actually needs
         w = wf = None
         if store is not None:

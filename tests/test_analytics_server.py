@@ -105,9 +105,9 @@ def test_method_validated_and_leveled_served():
     rng = np.random.default_rng(13)
     ga, files = _make(rng, 20, 2)
     with pytest.raises(ValueError):
-        AnalyticsServer(method="frontier_ell")   # not batched-capable
-    srv = AnalyticsServer(method="auto")         # coerced to frontier
-    assert srv.method == "frontier"
+        AnalyticsServer(method="nope")
+    srv = AnalyticsServer(method="auto")         # occupancy dispatch per pack
+    assert srv.method == "auto"
     srv_lv = AnalyticsServer(method="leveled")
     ga2, _ = _make(rng, 25, 3)
     srv_lv.register("a", ga)
@@ -164,6 +164,25 @@ def test_single_query_memoizes_only_needed_traversal():
     g2, c2 = sequence_count(cc.ga, l=3, method="frontier")
     assert np.array_equal(g1, g2)
     np.testing.assert_allclose(c1, c2, rtol=1e-6)
+
+
+@pytest.mark.parametrize("method", ["frontier_ell", "auto"])
+def test_ell_methods_served(method):
+    """ELL-plan methods run both the batched pair path and the single path
+    and still match the single-corpus analytics exactly."""
+    rng = np.random.default_rng(21)
+    ga, _ = _make(rng, 22, 2)
+    ga2, _ = _make(rng, 31, 3)
+    srv = AnalyticsServer(method=method)
+    srv.register("a", ga)
+    srv.register("b", ga2)
+    res = srv.run([Query("a", "word_count"),      # batched ELL pair
+                   Query("b", "word_count"),
+                   Query("a", "term_vector")])    # single-corpus path
+    np.testing.assert_allclose(res[0], np.asarray(word_count(ga)))
+    np.testing.assert_allclose(res[1], np.asarray(word_count(ga2)))
+    np.testing.assert_allclose(res[2], np.asarray(term_vector(ga)))
+    assert srv.stats.batched_calls == 1 and srv.stats.single_calls == 1
 
 
 def test_constructor_validation():

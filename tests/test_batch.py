@@ -48,7 +48,7 @@ def ragged():
 
 def test_batched_weights_match_sequential(ragged):
     gb, built = ragged
-    for method in ("frontier", "leveled"):
+    for method in ("frontier", "leveled", "frontier_ell", "leveled_ell"):
         w = np.asarray(batched_top_down_weights(gb, method=method))
         for i, (ga, _, _) in enumerate(built):
             want = np.asarray(top_down_weights(ga, method=method))

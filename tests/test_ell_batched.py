@@ -1,0 +1,268 @@
+"""Batched ELL propagation: kernel == oracle, ELL engines == segment_sum.
+
+Covers the ISSUE-2 acceptance surface: the fused [N, R, K] kernel against
+the jnp reference (interpret mode), the frontier_ell / leveled_ell batched
+traversals and all six analytics bit-identical to the segment_sum path on
+ragged / empty / size-1 batches, weight vectors straddling the old VMEM
+limit, and the occupancy dispatch predicates.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (GrammarBatch, batched_per_file_weights,
+                        batched_top_down_weights, compress_files, flatten,
+                        run_batched, top_down_weights)
+from repro.kernels import ops, ref
+from repro.kernels.propagate_batched import ell_propagate_batched_pallas
+
+
+def _build_corpus(rng, vocab, n_files, size):
+    phrase = rng.integers(0, vocab, int(rng.integers(3, 9)))
+    files = []
+    for _ in range(n_files):
+        parts, total = [], 0
+        while total < size:
+            p = (phrase if rng.random() < 0.5
+                 else rng.integers(0, vocab, int(rng.integers(2, 12))))
+            parts.append(p)
+            total += len(p)
+        files.append(np.concatenate(parts)[:size] if parts
+                     else np.zeros(0, np.int64))
+    g, nf = compress_files(files, vocab)
+    return flatten(g, vocab, nf)
+
+
+@pytest.fixture(scope="module")
+def ragged_gb():
+    """>= 4 corpora with wildly different R / V / F, incl. an empty one."""
+    rng = np.random.default_rng(1234)
+    specs = [(7, 1, 40), (50, 4, 300), (400, 6, 900), (15, 2, 120),
+             (30, 3, 0)]                       # last corpus: empty files
+    gas = [_build_corpus(rng, *s) for s in specs]
+    return GrammarBatch.build(gas), gas
+
+
+# --------------------------------------------------------------- kernel --
+@pytest.mark.parametrize("n,rows,k,R", [(1, 64, 1, 10), (3, 100, 4, 50),
+                                        (2, 300, 16, 333), (4, 257, 3, 129)])
+def test_kernel_matches_ref(n, rows, k, R, rng):
+    src = jnp.asarray(rng.integers(0, R, (n, rows, k)).astype(np.int32))
+    freq = jnp.asarray(rng.integers(0, 3, (n, rows, k)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(n, R)).astype(np.float32))
+    a = jnp.asarray((rng.random((n, R)) < 0.5).astype(np.float32))
+    d, s = ell_propagate_batched_pallas(w, a, src, freq, br=64)
+    d_ref, s_ref = ref.ell_propagate_batched_ref(w, a, src, freq)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(d_ref),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("wc", [32, 64, 512])
+def test_kernel_weight_chunking(wc, rng):
+    """Streaming the weight vector through small VMEM chunks must not
+    change the result (every source falls in exactly one chunk)."""
+    n, rows, k, R = 2, 130, 5, 777
+    src = jnp.asarray(rng.integers(0, R, (n, rows, k)).astype(np.int32))
+    freq = jnp.asarray(rng.integers(0, 4, (n, rows, k)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(n, R)).astype(np.float32))
+    a = jnp.asarray((rng.random((n, R)) < 0.7).astype(np.float32))
+    d, s = ell_propagate_batched_pallas(w, a, src, freq, br=64, wc=wc)
+    d_ref, s_ref = ref.ell_propagate_batched_ref(w, a, src, freq)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(d_ref),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_kernel_seen_counts_valid_entries_only(rng):
+    """seen must count (freq > 0) entries whose source is active — padding
+    (src=0, freq=0) never counts even when the root is active."""
+    src = jnp.asarray(np.array([[[1, 0], [0, 0], [1, 2]]], np.int32))
+    freq = jnp.asarray(np.array([[[2, 0], [0, 0], [1, 3]]], np.float32))
+    w = jnp.asarray(np.array([[1.0, 5.0, 7.0]], np.float32))
+    a = jnp.asarray(np.array([[1.0, 1.0, 0.0]], np.float32))  # rule 2 off
+    d, s = ops.ell_propagate_batched(w, a, src, freq)
+    np.testing.assert_allclose(np.asarray(d)[0], [10.0, 0.0, 5.0])
+    np.testing.assert_allclose(np.asarray(s)[0], [1.0, 0.0, 1.0])
+
+
+@pytest.mark.slow
+def test_kernel_weights_straddle_old_vmem_limit(rng):
+    """[N, R] weights with R > the old 3.5M-rule limit run through the
+    blocked batched kernel in interpret mode (no fallback left to hide it)."""
+    R = (3 << 20) + 2048
+    rows, k = 96, 2
+    w = np.zeros((1, R), np.float32)
+    hot = rng.integers(0, R, rows * k)
+    w[0, hot] = rng.normal(size=rows * k).astype(np.float32)
+    src = jnp.asarray(hot.reshape(1, rows, k).astype(np.int32))
+    freq = jnp.asarray(rng.integers(1, 4, (1, rows, k)).astype(np.float32))
+    a = jnp.asarray((np.arange(R) % 2 == 0).astype(np.float32)[None, :])
+    wj = jnp.asarray(w)
+    d, s = ell_propagate_batched_pallas(wj, a, src, freq, interpret=True)
+    d_ref, s_ref = ref.ell_propagate_batched_ref(wj, a, src, freq)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(d_ref),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_wrapper_validation_and_empty():
+    with pytest.raises(ValueError):
+        ops.ell_propagate_batched(jnp.zeros((2, 4)), jnp.zeros((2, 4)),
+                                  jnp.zeros((2, 4, 3), jnp.int32),
+                                  jnp.zeros((2, 4, 2)))
+    d, s = ops.ell_propagate_batched(jnp.zeros((2, 4)), jnp.zeros((2, 4)),
+                                     jnp.zeros((2, 0, 3), jnp.int32),
+                                     jnp.zeros((2, 0, 3)))
+    assert d.shape == (2, 0) and s.shape == (2, 0)
+
+
+# ------------------------------------------------------------- dispatch --
+def test_ell_batched_dispatch_predicate():
+    # tiny batches never amortize a launch
+    assert ops.ell_batched_use_ref(100, 1, 32, 4)
+    # absurd plan width
+    assert ops.ell_batched_use_ref(10_000, 4, 256,
+                                   ops.ELL_BATCH_MAX_WIDTH + 1)
+    # pathological sparsity: K-padded work >256x the real edges
+    assert ops.ell_batched_use_ref(10, 16, 1024, 512)
+    # the bench shape (16 corpora, R_pad 256, K 64, ~3k edges) must take ELL
+    assert not ops.ell_batched_use_ref(3000, 16, 256, 64)
+
+
+def test_auto_method_matches_frontier(ragged_gb):
+    gb, _ = ragged_gb
+    w_auto = np.asarray(batched_top_down_weights(gb, method="auto"))
+    w_frontier = np.asarray(batched_top_down_weights(gb, method="frontier"))
+    np.testing.assert_array_equal(w_auto, w_frontier)
+
+
+def test_ell_plan_layout(ragged_gb):
+    gb, gas = ragged_gb
+    src, freq, level, num_levels = gb.ell_plan()
+    K = gb.ell_plan_width()
+    assert src.shape == (gb.n, gb.R_pad, K) and freq.shape == src.shape
+    assert (K & (K - 1)) == 0                       # power of two
+    assert gb.ell_plan() is gb._plan_cache[("ell",)]   # memoized
+    srcn, freqn, leveln = (np.asarray(src), np.asarray(freq),
+                           np.asarray(level))
+    for i, ga in enumerate(gas):
+        # per-rule entry counts == in-degrees; padding is freq 0
+        np.testing.assert_array_equal(
+            (freqn[i, : ga.num_rules] > 0).sum(axis=1), ga.in_deg)
+        assert (freqn[i, ga.num_rules:] == 0).all()
+        np.testing.assert_array_equal(leveln[i, : ga.num_rules], ga.level)
+        assert (leveln[i, ga.num_rules:] == -1).all()
+        # edge multiset round-trips: (parent, child, freq) recoverable
+        rows, cols = np.nonzero(freqn[i, : ga.num_rules])
+        got = sorted(zip(srcn[i][rows, cols].tolist(), rows.tolist(),
+                         freqn[i][rows, cols].astype(int).tolist()))
+        want = sorted(zip(ga.edge_parent.tolist(), ga.edge_child.tolist(),
+                          ga.edge_freq.tolist()))
+        assert got == want
+    assert num_levels == max(ga.num_levels for ga in gas)
+
+
+def test_wide_plan_falls_back_to_segment_sum(monkeypatch):
+    """Explicit ELL methods must not build an O(R*K) dense plan when a hub
+    rule's in-degree exceeds the width gate — they take the segment_sum
+    base (identical results) instead."""
+    rng = np.random.default_rng(99)
+    gas = [_build_corpus(rng, 40, 2, 250), _build_corpus(rng, 30, 2, 200)]
+    gb = GrammarBatch.build(gas)
+    want = np.asarray(batched_top_down_weights(gb, method="frontier"))
+    for gate in ("ELL_BATCH_MAX_WIDTH", "ELL_PLAN_MAX_ENTRIES"):
+        monkeypatch.setattr(ops, gate, 0)
+        for method in ("frontier_ell", "leveled_ell"):
+            got = np.asarray(batched_top_down_weights(gb, method=method))
+            np.testing.assert_array_equal(got, want,
+                                          err_msg=f"{gate}/{method}")
+        assert ("ell",) not in gb._plan_cache       # plan never built
+        got_single = np.asarray(top_down_weights(gas[0], "frontier_ell"))
+        np.testing.assert_allclose(
+            got_single, np.asarray(top_down_weights(gas[0], "frontier")),
+            rtol=1e-6)
+        monkeypatch.undo()
+
+
+def test_single_corpus_ell_cache_evicted_on_gc():
+    """The id(ga)-keyed plan memo must die with the grammar: a recycled id
+    must never serve another grammar's plan."""
+    import gc
+
+    from repro.core import traversal
+
+    rng = np.random.default_rng(101)
+    ga = _build_corpus(rng, 35, 2, 200)
+    w = np.asarray(top_down_weights(ga, "frontier_ell"))
+    np.testing.assert_allclose(
+        w, np.asarray(top_down_weights(ga, "frontier")), rtol=1e-6)
+    key = ("ell", id(ga))
+    assert key in traversal._ENGINE_CACHE
+    del ga
+    gc.collect()
+    assert key not in traversal._ENGINE_CACHE
+
+
+# -------------------------------------------------- engine equivalence --
+def test_ell_engines_match_segment_sum_ragged(ragged_gb):
+    gb, gas = ragged_gb
+    want = np.asarray(batched_top_down_weights(gb, method="frontier"))
+    for method in ("frontier_ell", "leveled_ell"):
+        got = np.asarray(batched_top_down_weights(gb, method=method))
+        np.testing.assert_array_equal(got, want, err_msg=method)
+    # and against the single-corpus oracle on true sizes
+    for i, ga in enumerate(gas):
+        np.testing.assert_allclose(
+            want[i, : ga.num_rules],
+            np.asarray(top_down_weights(ga, "frontier")), rtol=1e-6)
+
+
+def test_ell_engines_size1_batch():
+    rng = np.random.default_rng(77)
+    ga = _build_corpus(rng, 60, 3, 400)
+    gb = GrammarBatch.build([ga])
+    want = np.asarray(batched_top_down_weights(gb, method="frontier"))
+    for method in ("frontier_ell", "leveled_ell", "auto"):
+        got = np.asarray(batched_top_down_weights(gb, method=method))
+        np.testing.assert_array_equal(got, want, err_msg=method)
+
+
+def test_ell_engines_empty_corpus_batch():
+    rng = np.random.default_rng(78)
+    gas = [_build_corpus(rng, 20, 2, 0), _build_corpus(rng, 25, 2, 150)]
+    gb = GrammarBatch.build(gas)
+    want = np.asarray(batched_top_down_weights(gb, method="frontier"))
+    for method in ("frontier_ell", "leveled_ell"):
+        got = np.asarray(batched_top_down_weights(gb, method=method))
+        np.testing.assert_array_equal(got, want, err_msg=method)
+
+
+def test_per_file_ell_maps_to_segment_sum(ragged_gb):
+    gb, _ = ragged_gb
+    want = np.asarray(batched_per_file_weights(gb, method="frontier"))
+    got = np.asarray(batched_per_file_weights(gb, method="frontier_ell"))
+    np.testing.assert_array_equal(got, want)
+    want_lv = np.asarray(batched_per_file_weights(gb, method="leveled"))
+    got_lv = np.asarray(batched_per_file_weights(gb, method="leveled_ell"))
+    np.testing.assert_array_equal(got_lv, want_lv)
+
+
+@pytest.mark.parametrize("kind", ("word_count", "sort", "inverted_index",
+                                  "term_vector", "sequence_count",
+                                  "ranked_inverted_index"))
+def test_all_six_analytics_ell_vs_segment_sum(ragged_gb, kind):
+    gb, _ = ragged_gb
+    want = run_batched(gb, kind, method="frontier")
+    got = run_batched(gb, kind, method="frontier_ell")
+    assert len(got) == len(want)
+    for w, g in zip(want, got):
+        if isinstance(w, tuple):
+            for wi, gi in zip(w, g):
+                np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+        else:
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))

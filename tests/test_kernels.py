@@ -71,19 +71,6 @@ def test_ell_block_shapes(br, rng):
                                rtol=1e-5, atol=1e-4)
 
 
-def test_ell_propagate_end_to_end(rng):
-    R = 120
-    src = jnp.asarray(rng.integers(0, R, (200, 4)).astype(np.int32))
-    freq = jnp.asarray(rng.integers(0, 4, (200, 4)).astype(np.float32))
-    dst = jnp.asarray(rng.integers(0, R, 200).astype(np.int32))
-    wts = jnp.asarray(rng.normal(size=R).astype(np.float32))
-    got = np.asarray(ops.ell_propagate(wts, src, freq, dst, R))
-    sums = np.asarray(ref.ell_row_sums_ref(wts, src, freq))
-    want = np.zeros(R)
-    np.add.at(want, np.asarray(dst), sums)
-    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
-
-
 # ------------------------------------------------------ fallback branches --
 def test_bincount_empty_input():
     got = ops.weighted_bincount(jnp.zeros(0, jnp.int32),
@@ -120,14 +107,45 @@ def test_ell_small_shape_fallback(rows, rng):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
 
 
-def test_ell_vmem_fallback_size_check_only():
-    """> 3.5M-rule weight vectors must route to the jnp ref (VMEM limit).
-    Pure size-check on the dispatch predicate — no giant allocation."""
-    limit = ops.ELL_VMEM_WEIGHT_LIMIT
-    assert ops.ell_use_ref(limit + 1, 1000)
-    assert ops.ell_use_ref(100 * limit, 1 << 20)
-    assert not ops.ell_use_ref(limit, 1000)       # at the limit: kernel OK
+def test_ell_no_vmem_cliff():
+    """The old ELL_VMEM_WEIGHT_LIMIT hard fallback is gone: weight size no
+    longer routes to the ref — the blocked kernel streams chunks."""
+    assert not hasattr(ops, "ELL_VMEM_WEIGHT_LIMIT")
+    assert not ops.ell_use_ref((3 << 20) + 1, 1000)
+    assert not ops.ell_use_ref(100 * (3 << 20), 1 << 20)
     assert not ops.ell_use_ref(1000, 1000)
+    assert ops.ell_use_ref(1000, ops.ELL_MIN_ROWS - 1)   # rows floor stays
+
+
+@pytest.mark.parametrize("wc", [64, 128, 1024])
+def test_ell_blocked_weight_chunks(wc, rng):
+    """Multi-chunk weight streaming == single-chunk == jnp ref."""
+    R = 1000
+    src = jnp.asarray(rng.integers(0, R, (300, 5)).astype(np.int32))
+    freq = jnp.asarray(rng.integers(0, 3, (300, 5)).astype(np.float32))
+    wts = jnp.asarray(rng.normal(size=R).astype(np.float32))
+    got = ell_row_sums_pallas(wts, src, freq, br=64, wc=wc)
+    want = ref.ell_row_sums_ref(wts, src, freq)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.slow
+def test_ell_weights_straddle_old_vmem_limit(rng):
+    """> 3.5M-rule weight vector through the ops wrapper in interpret mode:
+    the blocked kernel must handle it (the fallback used to hide it)."""
+    R = (3 << 20) + 4096
+    wts = np.zeros(R, np.float32)
+    hot = rng.integers(0, R, 512)
+    wts[hot] = rng.normal(size=512).astype(np.float32)
+    src = jnp.asarray(np.concatenate(
+        [hot[:128], rng.integers(0, R, 128)]).reshape(128, 2).astype(np.int32))
+    freq = jnp.asarray(rng.integers(1, 4, (128, 2)).astype(np.float32))
+    wtsj = jnp.asarray(wts)
+    got = ops.ell_row_sums(wtsj, src, freq, interpret=True)
+    want = ref.ell_row_sums_ref(wtsj, src, freq)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
 
 
 def test_bincount_batched_matches_per_row(rng):
@@ -141,6 +159,49 @@ def test_bincount_batched_matches_per_row(rng):
         want = np.asarray(ref.weighted_bincount_ref(
             jnp.asarray(ids[i]), jnp.asarray(vals[i]), 40))
         np.testing.assert_allclose(got[i], want, rtol=1e-4, atol=1e-4)
+
+
+def test_bincount_batched_chunking_crossover(rng, monkeypatch):
+    """Above the flat-bin limit the batch is chunked; results must match
+    the unchunked path exactly, including the single-row degenerate."""
+    ids = rng.integers(0, 40, (7, 300)).astype(np.int32)
+    ids[3, 5:25] = -1
+    vals = rng.normal(size=(7, 300)).astype(np.float32)
+    want = np.asarray(ops.weighted_bincount_batched(
+        jnp.asarray(ids), jnp.asarray(vals), 40))
+    for limit, rows in ((120, 3), (40, 1), (80, 2)):
+        monkeypatch.setattr(ops, "BINCOUNT_BATCH_FLAT_LIMIT", limit)
+        assert ops.bincount_batch_rows(7, 40) == rows
+        got = np.asarray(ops.weighted_bincount_batched(
+            jnp.asarray(ids), jnp.asarray(vals), 40))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_bincount_batch_rows_predicate():
+    limit = ops.BINCOUNT_BATCH_FLAT_LIMIT
+    assert ops.bincount_batch_rows(16, limit // 16) == 16       # fits: whole
+    assert ops.bincount_batch_rows(16, limit) == 1              # huge vocab
+    assert ops.bincount_batch_rows(16, 10 * limit) == 1         # per-row
+    assert ops.bincount_batch_rows(1000, limit // 100) == 100   # chunked
+
+
+def test_on_tpu_cache_resettable(monkeypatch):
+    """The backend probe must not leak across monkeypatched backends (the
+    old functools.lru_cache did)."""
+
+    class _Dev:
+        platform = "tpu"
+
+    assert ops._on_tpu() is False                 # CPU test environment
+    try:
+        monkeypatch.setattr(ops.jax, "devices", lambda: [_Dev()])
+        assert ops._on_tpu() is False             # memo still holds
+        ops.reset_backend_cache()
+        assert ops._on_tpu() is True              # re-probed after reset
+    finally:
+        monkeypatch.undo()
+        ops.reset_backend_cache()
+        assert ops._on_tpu() is False
 
 
 def test_bincount_batched_empty_and_bad_shapes():

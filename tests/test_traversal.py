@@ -34,7 +34,7 @@ def _oracle_weights(ga):
 def test_engines_agree(ga):
     ga, files, g = ga
     oracle = _oracle_weights(ga)
-    for method in ("frontier", "leveled", "frontier_ell"):
+    for method in ("frontier", "leveled", "frontier_ell", "leveled_ell"):
         w = np.asarray(top_down_weights(ga, method))
         assert np.allclose(w, oracle), method
 
