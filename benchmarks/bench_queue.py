@@ -1,0 +1,170 @@
+"""Async serving queue under a Poisson-ish synthetic arrival trace.
+
+Replays a deterministic open-loop trace — exponential inter-arrival times,
+mixed analytics kinds, a random half of the queries carrying deadlines —
+against :class:`AsyncAnalyticsServer` (inline polling, real clock), and
+emits ``queue/*`` rows:
+
+* median / p95 submit-to-result latency (us) and end-to-end throughput
+  (the mean also lands in the JSON — it carries any residual compile tail);
+* flush counts by reason (max_batch / deadline / idle / drain) — the
+  policy's fingerprint on this mix;
+* the engine-call amplification (flushes per query: < 1 means batching).
+
+Everything is warmed (compiled) before the trace so the numbers are
+steady-state queue/policy overhead + batched execution, not compile time.
+``run`` returns the dict that ``benchmarks.run`` merges into
+BENCH_batch.json (the CI perf artifact).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import compress_files, flatten
+from repro.core.batch import _round_up_pow2
+from repro.serving import AnalyticsServer, AsyncAnalyticsServer, Query
+
+from .common import emit
+
+KINDS = ("word_count", "sort", "term_vector", "sequence_count")
+
+
+def _bucket_key(ga):
+    """The corpus's per-dim pow2 buckets (mirrors GrammarBatch.build): any
+    pack of corpora sharing this key has the same compilation signature."""
+    return (_round_up_pow2(ga.num_rules), _round_up_pow2(ga.num_edges),
+            _round_up_pow2(len(ga.tw_rule)),
+            _round_up_pow2(ga.num_files, 1), _round_up_pow2(ga.vocab_size),
+            _round_up_pow2(len(ga.fedge_file), 1),
+            _round_up_pow2(len(ga.fword_file), 1))
+
+
+def make_uniform_corpora(n: int, seed: int = 13, size: int = 500):
+    """n corpora whose padded dims land in the same pow2 buckets: steady
+    serving traffic, where every flush subset of equal width hits ONE
+    compiled program per kind (ragged sizes would measure XLA compiles, not
+    the queue).  Corpora falling into other buckets are re-drawn."""
+    rng = np.random.default_rng(seed)
+    gas, want = [], None
+    for _ in range(50 * n):
+        vocab = 160
+        phrase = rng.integers(0, vocab, 6)
+        files = []
+        for _ in range(3):
+            parts, total = [], 0
+            while total < size:
+                p = (phrase if rng.random() < 0.5
+                     else rng.integers(0, vocab, int(rng.integers(3, 12))))
+                parts.append(p)
+                total += len(p)
+            files.append(np.concatenate(parts)[:size])
+        g, nf = compress_files(files, vocab)
+        ga = flatten(g, vocab, nf)
+        if want is None:
+            want = _bucket_key(ga)
+        if _bucket_key(ga) == want:
+            gas.append(ga)
+            if len(gas) == n:
+                return gas
+    raise RuntimeError("could not draw enough same-bucket corpora")
+
+
+def _make_trace(rng, names, n_queries: int, mean_gap_s: float):
+    arrivals = np.cumsum(rng.exponential(mean_gap_s, n_queries))
+    trace = []
+    for at in arrivals:
+        kind = KINDS[int(rng.integers(len(KINDS)))]
+        q = Query(names[int(rng.integers(len(names)))], kind, l=3)
+        rel_deadline = (float(rng.uniform(0.01, 0.05))
+                        if rng.random() < 0.5 else None)
+        trace.append((float(at), q, rel_deadline))
+    return trace
+
+
+def _replay(eng, trace):
+    """Replay one trace against a fresh queue on the shared engine; returns
+    (latencies, flushes-by-reason delta, wall seconds)."""
+    aq = AsyncAnalyticsServer(eng, idle_timeout=0.004, poll_interval=0.001)
+    flushes_before = dict(eng.stats.flushes)
+    lat = {}
+    t0 = time.monotonic()
+
+    def _now() -> float:
+        return time.monotonic() - t0
+
+    futs = []
+    for at, q, rel_dl in trace:
+        while _now() < at:
+            aq.poll()
+            time.sleep(0.0002)
+        dl = None if rel_dl is None else t0 + at + rel_dl
+        submitted = _now()       # before submit: max_batch flushes execute
+        fut = aq.submit(q, deadline=dl)      # inside the submit call itself
+        fut.add_done_callback(
+            lambda _f, s=submitted, k=len(futs): lat.__setitem__(
+                k, _now() - s))
+        futs.append(fut)
+    while not all(f.done() for f in futs):
+        aq.poll()
+        time.sleep(0.0005)
+    wall = _now()
+    aq.close()
+    lats = np.array([lat[k] for k in sorted(lat)])
+    flushes = {k: v - flushes_before.get(k, 0)
+               for k, v in eng.stats.flushes.items()
+               if v - flushes_before.get(k, 0)}
+    return lats, flushes, wall
+
+
+def run(smoke: bool = False) -> dict:
+    n_corpora = 4 if smoke else 8
+    n_queries = 24 if smoke else 96
+    rng = np.random.default_rng(17)
+    gas = make_uniform_corpora(n_corpora, seed=13)
+    eng = AnalyticsServer(max_batch=4)
+    names = []
+    for i, ga in enumerate(gas):
+        name = f"q{i}"
+        eng.register(name, ga)
+        names.append(name)
+
+    # warm the full-pack shapes and seed the latency EWMA ...
+    for kind in KINDS:
+        eng.run([Query(n, kind, l=3) for n in names])
+
+    trace = _make_trace(rng, names, n_queries,
+                        mean_gap_s=0.02 if smoke else 0.01)
+    # ... then replay to compile the partial-pack shapes the flush policy
+    # actually produces, and report the steady-state final pass
+    _replay(eng, trace)
+    _replay(eng, trace)
+    lats, flushes, wall = _replay(eng, trace)
+    n_flushes = max(sum(flushes.values()), 1)
+    emit("queue/median_latency", float(np.median(lats)), f"n={n_queries}")
+    emit("queue/p95_latency", float(np.percentile(lats, 95)),
+         f"n={n_queries}")
+    emit("queue/throughput", 0.0, f"{n_queries / wall:.0f} q/s")
+    emit("queue/flushes", 0.0,
+         ";".join(f"{k}={v}" for k, v in sorted(flushes.items()))
+         + f";per_query={n_flushes / n_queries:.2f}")
+    return {"queue": {
+        "n_corpora": n_corpora,
+        "n_queries": n_queries,
+        "mean_latency_us": float(lats.mean() * 1e6),
+        "median_latency_us": float(np.median(lats) * 1e6),
+        "p95_latency_us": float(np.percentile(lats, 95) * 1e6),
+        "throughput_qps": float(n_queries / wall),
+        "flushes": flushes,
+        "flushes_per_query": n_flushes / n_queries,
+        "max_queue_depth": eng.stats.max_queue_depth,
+        "latency_estimates_s": {
+            f"{kind}": eng.stats.estimate_latency(kind) for kind in KINDS},
+    }}
+
+
+if __name__ == "__main__":
+    import sys
+    run(smoke="--smoke" in sys.argv)

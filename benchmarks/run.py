@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   vi_c/*     — §VI-C analogue: top-down vs bottom-up + engine variants
   pipeline/* — compressed-store batch feed throughput
   batch/*    — batched multi-corpus engine vs sequential per-corpus loop
+  queue/*    — async deadline-aware queue under a Poisson-ish trace
   roofline/* — summary rows from the dry-run roofline table (if present)
 
 ``--smoke`` runs a minimal fast subset (CI's sanity check that the
@@ -19,9 +20,9 @@ import sys
 
 
 def _write_batch_json(data: dict, path: str = "BENCH_batch.json") -> None:
-    """Persist the batch-engine timings (batched vs sequential, ELL vs
-    segment_sum) — CI uploads this as an artifact to track the perf
-    trajectory across PRs."""
+    """Persist the batch-engine + serving-queue timings (batched vs
+    sequential, ELL vs segment_sum, queue latency/flush mix) — CI uploads
+    this as an artifact to track the perf trajectory across PRs."""
     with open(path, "w") as f:
         json.dump(data, f, indent=2, sort_keys=True)
     print(f"wrote {path}", flush=True)
@@ -31,10 +32,12 @@ def main() -> None:
     quick = "--quick" in sys.argv
     smoke = "--smoke" in sys.argv
 
-    from . import bench_batch
+    from . import bench_batch, bench_queue
 
     if smoke:
-        _write_batch_json(bench_batch.run(smoke=True))
+        data = bench_batch.run(smoke=True)
+        data.update(bench_queue.run(smoke=True))
+        _write_batch_json(data)
         return
 
     datasets = ("D", "R") if quick else ("A", "B", "D", "R")
@@ -45,7 +48,9 @@ def main() -> None:
     bench_phases.run(datasets)
     bench_traversal.run(datasets)
     bench_pipeline.run(("D", "R") if quick else ("B", "R"))
-    _write_batch_json(bench_batch.run())
+    data = bench_batch.run()
+    data.update(bench_queue.run())
+    _write_batch_json(data)
 
     # roofline summary (reads dry-run artifacts if the sweep has run)
     try:

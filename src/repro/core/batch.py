@@ -666,7 +666,11 @@ def _padded_sequence_plans(gb: GrammarBatch, l: int):
     sps = [_sequence.plan_stream(ga, l) for ga in gb.gas]
 
     R_pad = gb.R_pad
-    Kd = max(max(p.head_dep.shape[1], p.tail_dep.shape[1]) for p in htps)
+    # bucket the data-dependent plan widths like the pack dims: packs with
+    # equal signatures then reuse the jitted resolve/count programs across
+    # corpus compositions instead of compiling per exact max-width
+    Kd = _round_up_pow2(
+        max(max(p.head_dep.shape[1], p.tail_dep.shape[1]) for p in htps), 1)
 
     def _stack_plan(get_arr, fill, dtype, width2):
         out = np.full((N, R_pad, width2), fill, dtype)
@@ -686,8 +690,8 @@ def _padded_sequence_plans(gb: GrammarBatch, l: int):
     head = _resolve("head")
     tail = _resolve("tail")
 
-    S_pad = max(max(len(p.st_kind) for p in sps), l)
-    W_pad = max(max(len(p.win_start) for p in sps), 1)
+    S_pad = _round_up_pow2(max(max(len(p.st_kind) for p in sps), l), 1)
+    W_pad = _round_up_pow2(max(max(len(p.win_start) for p in sps), 1), 1)
     win_valid = np.zeros((N, W_pad), bool)
     for i, p in enumerate(sps):
         win_valid[i, : len(p.win_start)] = True

@@ -1,8 +1,11 @@
 """Serving: batched KV-cache decode on top of models.decode_step, plus the
-query-dispatch layer for the batched multi-corpus analytics engine."""
+query-dispatch layer for the batched multi-corpus analytics engine and its
+async deadline-aware submission queue."""
 
 from .decode import make_serve_step, make_prefill_step, greedy_generate
 from .analytics_server import AnalyticsServer, Query, ServerStats
+from .queue import AsyncAnalyticsServer, FlushEvent
 
 __all__ = ["make_serve_step", "make_prefill_step", "greedy_generate",
-           "AnalyticsServer", "Query", "ServerStats"]
+           "AnalyticsServer", "Query", "ServerStats",
+           "AsyncAnalyticsServer", "FlushEvent"]

@@ -11,23 +11,39 @@ device (one dispatch + one compilation per corpus shape).  The server:
    padding waste — the bucketed :class:`GrammarBatch` dims round up to
    powers of two, so similar sizes collapse onto one compiled program);
 3. executes ONE jitted batched call per chunk (``core.batch.run_batched``);
-4. answers duplicate queries for the same corpus from the chunk result, and
-   single-corpus chunks from the per-corpus path reusing the traversal
-   weights memoized on :class:`repro.data.CompressedCorpus`.
+4. answers duplicate queries for the same corpus from the chunk result;
+   single-corpus chunks take the per-corpus path reusing the traversal
+   weights memoized on :class:`repro.data.CompressedCorpus`, or a cached
+   size-1 pack (compiled programs + sequence plans reused) for bare
+   :class:`GrammarArrays` registrations.
 
 ``GrammarBatch`` packs are cached by corpus-id tuple, so a steady query mix
 pays the host-side packing once.
+
+The engine core is split so the synchronous :meth:`AnalyticsServer.run` and
+the async queue (:mod:`repro.serving.queue`) execute the exact same code:
+
+* :meth:`AnalyticsServer.plan_groups` — validate + group a query list;
+* :meth:`AnalyticsServer.run_group`   — canonical size-sorted chunking of
+  one (kind, l) group;
+* :meth:`AnalyticsServer.execute_chunk` — ONE batched (or memoized
+  single-corpus) execution, with the observed latency folded into the
+  per-signature EWMA on :class:`ServerStats` (the async flush policy reads
+  those estimates to decide when a group's earliest deadline is "one batch
+  away").
 """
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Sequence, Tuple, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core import GrammarArrays, analytics as _analytics
-from repro.core.batch import ANALYTICS_KINDS, GrammarBatch, run_batched
+from repro.core.batch import (ANALYTICS_KINDS, GrammarBatch, run_batched,
+                              _round_up_pow2)
 from repro.data.store import CompressedCorpus
 
 
@@ -38,8 +54,24 @@ class Query:
     kind: str                  # one of ANALYTICS_KINDS
     l: int = 3                 # sequence_count only
 
+    def effective_l(self) -> Optional[int]:
+        """``l`` is a sequence_count parameter ONLY: for every other kind it
+        is normalized to ``None`` so it can neither split a group (two
+        word_count queries with different ``l`` share one batched call) nor
+        mis-share one (a sequence_count group always carries its real
+        ``l``)."""
+        return self.l if self.kind == "sequence_count" else None
+
     def group_key(self) -> Tuple:
-        return (self.kind, self.l if self.kind == "sequence_count" else None)
+        return (self.kind, self.effective_l())
+
+
+#: Flush/latency signature of the single-corpus execution path (no pack).
+SINGLE_SIGNATURE: Tuple = ("single",)
+
+#: Seconds assumed for a (kind, signature) pair never executed before; the
+#: async queue uses this until real observations feed the EWMA.
+DEFAULT_LATENCY_ESTIMATE = 0.02
 
 
 @dataclass
@@ -52,6 +84,56 @@ class ServerStats:
     # distinct pad signatures -> batched-call count (bounded by the number
     # of distinct bucket shapes, not by traffic volume)
     signatures: Dict[Tuple[int, ...], int] = field(default_factory=dict)
+
+    # ----- async queue counters (written by serving/queue.py) -----
+    submitted: int = 0                 # queries entered through submit()
+    flushes: Dict[str, int] = field(default_factory=dict)  # reason -> count
+    max_queue_depth: int = 0           # high-water pending-query count
+
+    # ----- latency estimator -----
+    # EWMA of observed chunk latencies keyed by (kind, chunk signature);
+    # the signature is the GrammarBatch pad signature for batched chunks or
+    # SINGLE_SIGNATURE for the per-corpus path.  Bounded by the number of
+    # distinct (kind, bucket-shape) pairs, not by traffic volume.
+    latency_ewma: Dict[Tuple, float] = field(default_factory=dict)
+    latency_obs: Dict[Tuple, int] = field(default_factory=dict)
+    ewma_alpha: float = 0.25
+
+    def observe_latency(self, kind: str, signature: Tuple,
+                        seconds: float) -> None:
+        key = (kind, signature)
+        n = self.latency_obs.get(key, 0)
+        self.latency_obs[key] = n + 1
+        if n == 0:
+            # a key's first execution pays jit compilation (possibly
+            # seconds) that recurring traffic never sees again; adopting it
+            # would inflate the deadline-flush estimate and collapse
+            # deadline-carrying groups into near-singleton flushes
+            return
+        prev = self.latency_ewma.get(key)
+        self.latency_ewma[key] = (
+            seconds if prev is None
+            else self.ewma_alpha * seconds + (1.0 - self.ewma_alpha) * prev)
+
+    def estimate_latency(self, kind: Optional[str] = None,
+                         default: float = DEFAULT_LATENCY_ESTIMATE) -> float:
+        """Expected seconds for one batched call of ``kind``.
+
+        Takes the MAX over that kind's per-signature EWMAs (falling back to
+        all kinds, then ``default``): a pending group's pack signature is
+        unknown until it is chunked, and averaging in the cheap
+        single-corpus path would make the deadline flush fire too late for
+        batched groups — overestimating only flushes a little early."""
+        vals = [v for (k, _sig), v in self.latency_ewma.items()
+                if kind is None or k == kind]
+        if not vals:
+            vals = list(self.latency_ewma.values())
+        if not vals:
+            return default
+        return max(vals)
+
+    def count_flush(self, reason: str) -> None:
+        self.flushes[reason] = self.flushes.get(reason, 0) + 1
 
 
 class AnalyticsServer:
@@ -107,56 +189,125 @@ class AnalyticsServer:
     def corpora(self) -> Tuple[str, ...]:
         return tuple(self._corpora)
 
-    # ----------------------------------------------------------- serving --
-    def run(self, queries: Sequence[Query]) -> List:
-        """Execute all queries; results align with the input order and are
-        identical to calling the single-corpus analytics per query."""
-        for q in queries:
-            if q.kind not in ANALYTICS_KINDS:
-                raise ValueError(f"unknown analytics kind {q.kind!r}")
-            if q.corpus not in self._corpora:
-                raise KeyError(f"corpus {q.corpus!r} not registered")
-        self.stats.queries += len(queries)
+    def validate(self, q: Query) -> None:
+        if q.kind not in ANALYTICS_KINDS:
+            raise ValueError(f"unknown analytics kind {q.kind!r}")
+        if q.corpus not in self._corpora:
+            raise KeyError(f"corpus {q.corpus!r} not registered")
 
-        # group by (kind, params), preserving first-seen order
+    def size_bucket(self, name: str) -> int:
+        """Grammar-size bucket of a registered corpus (power-of-two rule
+        count, matching the :class:`GrammarBatch` pad bucketing) — the async
+        queue groups pending queries by it so a flush packs corpora of
+        similar size onto one compiled program."""
+        return _round_up_pow2(self._corpora[name].num_rules)
+
+    # ----------------------------------------------------------- serving --
+    def plan_groups(self, queries: Sequence[Query]
+                    ) -> List[Tuple[str, Optional[int], List[int]]]:
+        """Validate ``queries`` and group them by :meth:`Query.group_key`.
+
+        Returns ``[(kind, l, idxs)]`` in first-seen order; ``l`` is the
+        normalized group parameter (None for every kind but sequence_count —
+        see :meth:`Query.effective_l`).
+        """
+        for q in queries:
+            self.validate(q)
         groups: Dict[Tuple, List[int]] = {}
         for i, q in enumerate(queries):
             groups.setdefault(q.group_key(), []).append(i)
+        return [(kind, l, idxs) for (kind, l), idxs in groups.items()]
+
+    def run(self, queries: Sequence[Query]) -> List:
+        """Execute all queries; results align with the input order and are
+        identical to calling the single-corpus analytics per query."""
+        plans = self.plan_groups(queries)
+        self.stats.queries += len(queries)
 
         results: List = [None] * len(queries)
-        for key, idxs in groups.items():
+        for kind, l, idxs in plans:
             self.stats.groups += 1
-            kind, l = key
             names: List[str] = []
             for i in idxs:
                 if queries[i].corpus not in names:
                     names.append(queries[i].corpus)
-            by_corpus = self._run_group(kind, 3 if l is None else l, names)
+            by_corpus = self.run_group(kind, names, l=l)
             for i in idxs:
                 results[i] = by_corpus[queries[i].corpus]
         return results
 
-    # ---------------------------------------------------------- internals --
-    def _run_group(self, kind: str, l: int, names: List[str]) -> Dict:
-        # chunk corpora of similar grammar size together: padding in each
-        # pack is bounded by the size spread within the chunk.  Name is the
-        # tie-break so the chunking (and thus the pack-cache key) is
-        # canonical for a given corpus set regardless of query order.
+    # ------------------------------------------------------- engine core --
+    def run_group(self, kind: str, names: Sequence[str],
+                  l: Optional[int] = None) -> Dict:
+        """Execute one (kind, l) group over deduped corpus ``names``.
+
+        Chunks corpora of similar grammar size together: padding in each
+        pack is bounded by the size spread within the chunk.  Name is the
+        tie-break so the chunking (and thus the pack-cache key) is canonical
+        for a given corpus set regardless of query order.  Both the sync
+        :meth:`run` and the async queue flush land here.
+        """
         order = sorted(names, key=lambda n: (self._corpora[n].num_rules, n))
         out: Dict = {}
         for s in range(0, len(order), self.max_batch):
-            chunk = order[s: s + self.max_batch]
-            if len(chunk) == 1:
-                out[chunk[0]] = self._run_single(kind, l, chunk[0])
-            else:
-                gb = self._get_batch(chunk)
-                vals = run_batched(gb, kind, method=self.method, l=l)
-                self.stats.batched_calls += 1
-                self.stats.signatures[gb.signature] = \
-                    self.stats.signatures.get(gb.signature, 0) + 1
-                out.update(zip(chunk, vals))
+            out.update(self.execute_chunk(kind, order[s: s + self.max_batch],
+                                          l=l))
         return out
 
+    def execute_chunk(self, kind: str, chunk: Sequence[str],
+                      l: Optional[int] = None) -> Dict:
+        """ONE execution: a jitted batched call for a multi-corpus chunk, or
+        the per-corpus path (memoized weights) when the chunk degenerates to
+        one corpus.  Records the observed wall latency into the
+        per-signature EWMA (``stats.latency_ewma``) that the async flush
+        policy uses as its batch-latency estimate.
+
+        ``l`` must be the group-normalized parameter: the real window length
+        for sequence_count, ``None`` for every other kind (enforced here so
+        a stray ``Query.l`` can never split or mis-share a group).
+        """
+        if kind == "sequence_count":
+            if l is None:
+                raise ValueError("sequence_count chunk needs an explicit l")
+        elif l is not None:
+            raise ValueError(
+                f"l={l!r} is meaningless for kind {kind!r}; group keys "
+                f"normalize it to None (Query.effective_l)")
+        if len(chunk) > self.max_batch:
+            raise ValueError(f"chunk of {len(chunk)} exceeds "
+                             f"max_batch={self.max_batch}")
+        t0 = time.perf_counter()
+        if len(chunk) == 1:
+            name = chunk[0]
+            if name in self._stores:
+                # CompressedCorpus: the per-corpus path reuses the traversal
+                # weights memoized on the store
+                out = {name: self._run_single(kind, name, l=l)}
+                sig = SINGLE_SIGNATURE
+            else:
+                # bare GrammarArrays: a cached size-1 pack keeps compiled
+                # programs and (sequence_count) host plans across calls —
+                # repeat single-corpus traffic costs one dispatch, not one
+                # re-plan + re-compile
+                gb = self._get_batch([name])
+                vals = run_batched(gb, kind, method=self.method,
+                                   l=3 if l is None else l)
+                sig = gb.signature
+                out = {name: vals[0]}
+            self.stats.single_calls += 1
+        else:
+            gb = self._get_batch(list(chunk))
+            vals = run_batched(gb, kind, method=self.method,
+                               l=3 if l is None else l)
+            self.stats.batched_calls += 1
+            self.stats.signatures[gb.signature] = \
+                self.stats.signatures.get(gb.signature, 0) + 1
+            sig = gb.signature
+            out = dict(zip(chunk, vals))
+        self.stats.observe_latency(kind, sig, time.perf_counter() - t0)
+        return out
+
+    # ---------------------------------------------------------- internals --
     def _get_batch(self, names: Sequence[str]) -> GrammarBatch:
         key = tuple(names)
         gb = self._batches.get(key)
@@ -170,11 +321,10 @@ class AnalyticsServer:
         self._batches[key] = gb
         return gb
 
-    def _run_single(self, kind: str, l: int, name: str):
+    def _run_single(self, kind: str, name: str, l: Optional[int] = None):
         """Per-corpus path: reuses weights memoized on the corpus store."""
         ga = self._corpora[name]
         store = self._stores.get(name)
-        self.stats.single_calls += 1
         m = self._SINGLE_METHOD.get(self.method, self.method)
         # only run (and memoize) the traversal the query actually needs
         w = wf = None

@@ -1,0 +1,324 @@
+"""Async deadline-aware request queue over the batched analytics engine.
+
+The synchronous :class:`AnalyticsServer` batches whatever one caller hands
+it in a single ``run``.  Under serving load, queries arrive one at a time
+from many callers — batching opportunities exist *across* submissions, not
+within them.  :class:`AsyncAnalyticsServer` exposes ``submit(query,
+deadline=...) -> Future`` and holds queries in a pending queue, grouped by
+:meth:`Query.group_key` (kind + normalized l) and by grammar-size bucket
+(power-of-two rule count, so a flush packs corpora of similar size onto one
+compiled program).  A group is flushed — one call into the shared engine
+core (:meth:`AnalyticsServer.run_group`) — when any of:
+
+``max_batch``  the group reaches ``max_batch`` distinct corpora: a full
+               pack, nothing to wait for (checked on every submit);
+``deadline``   the earliest deadline in the group is within one estimated
+               batch latency (the per-signature EWMA tracked by
+               ``ServerStats.observe_latency``) of *now* — waiting longer
+               would miss it;
+``idle``       no new query joined the group for ``idle_timeout`` seconds —
+               traffic has moved on, stop holding the stragglers;
+``max_wait``   the OLDEST query in the group has waited ``max_wait``
+               seconds — a sustained same-corpus stream resets idleness on
+               every arrival and never fills a pack, so waiting is bounded
+               by submission age too;
+``drain``      an explicit :meth:`drain` / :meth:`close`.
+
+Because flushes call the same ``run_group`` / ``execute_chunk`` core as the
+sync path, results are bit-identical to a one-shot ``AnalyticsServer.run``
+of the same queries (tests/test_queue.py fuzzes exactly that).
+
+Time is injectable (``clock=``): the flush-policy tests drive a simulated
+clock through :meth:`poll`, deterministically.  For real deployments,
+:meth:`start` runs a small daemon thread that polls at ``poll_interval``;
+``submit`` is thread-safe and flushes triggered by a full group execute on
+the submitting thread.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+from .analytics_server import (DEFAULT_LATENCY_ESTIMATE, AnalyticsServer,
+                               Query)
+
+
+@dataclass
+class _Pending:
+    query: Query
+    deadline: Optional[float]       # absolute, in the server's clock domain
+    future: Future
+    submitted_at: float
+
+
+@dataclass
+class _Group:
+    kind: str
+    l: Optional[int]                # normalized (None unless sequence_count)
+    items: List[_Pending] = field(default_factory=list)
+    last_arrival: float = 0.0
+    # distinct corpora in arrival order (dict-as-ordered-set: submit must
+    # stay O(1), not rescan items, while holding the queue lock)
+    corpora_seen: Dict[str, None] = field(default_factory=dict)
+
+    def add(self, p: _Pending) -> None:
+        self.items.append(p)
+        self.last_arrival = p.submitted_at
+        self.corpora_seen.setdefault(p.query.corpus)
+
+    def corpora(self) -> List[str]:
+        return list(self.corpora_seen)
+
+    def earliest_deadline(self) -> Optional[float]:
+        ds = [p.deadline for p in self.items if p.deadline is not None]
+        return min(ds) if ds else None
+
+
+@dataclass(frozen=True)
+class FlushEvent:
+    """One flush, as observed by tests/benchmarks (``flush_log``)."""
+    reason: str         # max_batch | deadline | idle | max_wait | drain
+    kind: str
+    l: Optional[int]
+    n_queries: int
+    n_corpora: int
+    at: float                       # clock time the flush fired
+
+
+class AsyncAnalyticsServer:
+    """Deadline-aware submission queue wrapping an :class:`AnalyticsServer`.
+
+    Parameters
+    ----------
+    server:        the engine; its ``max_batch``/``method``/pack cache and
+                   its ``stats`` (flush counters, latency EWMA) are shared.
+    idle_timeout:  seconds a group may sit without new arrivals before it is
+                   flushed anyway (condition ``idle``).
+    max_wait:      hard bound on how long any single query may sit queued
+                   (condition ``max_wait``); defaults to ``10 *
+                   idle_timeout``.
+    default_latency: batch-latency estimate used for a kind that has never
+                   executed (seeds the ``deadline`` condition before the
+                   EWMA has observations).
+    clock:         monotonic-time source; injectable for simulated-clock
+                   tests.  Deadlines passed to :meth:`submit` are absolute
+                   values in this clock's domain.
+    poll_interval: sleep granularity of the background thread
+                   (:meth:`start`); also the staleness bound on the
+                   ``deadline``/``idle`` conditions when threaded.
+    """
+
+    def __init__(self, server: AnalyticsServer, *,
+                 idle_timeout: float = 0.005,
+                 max_wait: Optional[float] = None,
+                 default_latency: float = DEFAULT_LATENCY_ESTIMATE,
+                 clock: Callable[[], float] = time.monotonic,
+                 poll_interval: float = 0.001):
+        if idle_timeout < 0:
+            raise ValueError("idle_timeout must be >= 0")
+        if poll_interval <= 0:
+            raise ValueError("poll_interval must be > 0")
+        self._engine = server
+        self.idle_timeout = float(idle_timeout)
+        self.max_wait = (10.0 * self.idle_timeout if max_wait is None
+                         else float(max_wait))
+        if self.max_wait < self.idle_timeout:
+            raise ValueError("max_wait must be >= idle_timeout")
+        self.default_latency = float(default_latency)
+        self.poll_interval = float(poll_interval)
+        self._now = clock
+        self._pending: Dict[Tuple, _Group] = {}
+        self._depth = 0                      # total pending queries, O(1)
+        self._lock = threading.RLock()
+        self._exec_lock = threading.Lock()   # one engine call at a time
+        # bounded observability ring (long-lived servers must not leak)
+        self.flush_log: Deque[FlushEvent] = deque(maxlen=4096)
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self._wake = threading.Event()
+        self._closed = False
+
+    # ------------------------------------------------------------- state --
+    @property
+    def stats(self):
+        return self._engine.stats
+
+    @property
+    def queue_depth(self) -> int:
+        with self._lock:
+            return self._depth
+
+    # ------------------------------------------------------------ submit --
+    def submit(self, query: Query, deadline: Optional[float] = None
+               ) -> Future:
+        """Enqueue one query; returns a future resolving to exactly what
+        ``AnalyticsServer.run([query])[0]`` would.  ``deadline`` is an
+        absolute time in the server's clock domain (``None``: flushed by
+        ``max_batch`` or ``idle`` only).  Invalid queries raise here, not on
+        the future."""
+        self._engine.validate(query)
+        to_flush: Optional[_Group] = None
+        fut: Future = Future()
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("queue is closed")
+            now = self._now()
+            gk = query.group_key()
+            key = (gk, self._engine.size_bucket(query.corpus))
+            g = self._pending.get(key)
+            if g is None:
+                kind, l = gk
+                g = self._pending[key] = _Group(kind=kind, l=l)
+            g.add(_Pending(query, deadline, fut, now))
+            self.stats.submitted += 1
+            self._depth += 1
+            self.stats.max_queue_depth = max(self.stats.max_queue_depth,
+                                             self._depth)
+            if len(g.corpora_seen) >= self._engine.max_batch:
+                to_flush = self._pop(key)
+        if to_flush is not None:
+            self._flush_group(to_flush, "max_batch", self._now())
+        self._kick()
+        return fut
+
+    # -------------------------------------------------------------- poll --
+    def poll(self, now: Optional[float] = None) -> Optional[float]:
+        """Fire every due flush condition; returns the next time a condition
+        could trigger (for the serve loop's sleep), or ``None`` if the queue
+        is empty.  Simulated-clock tests call this directly with ``now``."""
+        if now is None:
+            now = self._now()
+        due: List[Tuple[_Group, str]] = []
+        with self._lock:
+            for key in list(self._pending):
+                g = self._pending[key]
+                reason = self._due_reason(g, now)
+                if reason is not None:
+                    due.append((self._pop(key), reason))
+        for g, reason in due:
+            self._flush_group(g, reason, now)
+        with self._lock:
+            wakes = [self._next_trigger(g) for g in self._pending.values()]
+        return min(wakes) if wakes else None
+
+    def _due_reason(self, g: _Group, now: float) -> Optional[str]:
+        ed = g.earliest_deadline()
+        if ed is not None:
+            est = self.stats.estimate_latency(g.kind,
+                                              default=self.default_latency)
+            if ed - now <= est:
+                return "deadline"
+        if now - g.last_arrival >= self.idle_timeout:
+            return "idle"
+        # steady same-group arrivals reset idleness forever — bound the
+        # oldest query's wait regardless
+        if now - g.items[0].submitted_at >= self.max_wait:
+            return "max_wait"
+        return None
+
+    def _next_trigger(self, g: _Group) -> float:
+        t = min(g.last_arrival + self.idle_timeout,
+                g.items[0].submitted_at + self.max_wait)
+        ed = g.earliest_deadline()
+        if ed is not None:
+            est = self.stats.estimate_latency(g.kind,
+                                              default=self.default_latency)
+            t = min(t, ed - est)
+        return t
+
+    # ------------------------------------------------------------- drain --
+    def drain(self) -> None:
+        """Flush everything pending, regardless of deadlines/timeouts."""
+        with self._lock:
+            groups = [self._pop(key) for key in list(self._pending)]
+        now = self._now()
+        for g in groups:
+            self._flush_group(g, "drain", now)
+
+    def _pop(self, key: Tuple) -> _Group:
+        """Remove a group from the queue (lock held by caller)."""
+        g = self._pending.pop(key)
+        self._depth -= len(g.items)
+        return g
+
+    # ------------------------------------------------------------- flush --
+    def _flush_group(self, g: _Group, reason: str, now: float) -> None:
+        # claim each future (running state): callers may have cancel()ed a
+        # pending one — set_result on it would raise InvalidStateError,
+        # starving the rest of the group and killing the serve loop
+        live = [p for p in g.items
+                if p.future.set_running_or_notify_cancel()]
+        names: List[str] = []
+        for p in live:
+            if p.query.corpus not in names:
+                names.append(p.query.corpus)
+        if live:
+            try:
+                with self._exec_lock:
+                    by_corpus = self._engine.run_group(g.kind, names, l=g.l)
+            except Exception as e:              # noqa: BLE001 — fanned out
+                for p in live:
+                    p.future.set_exception(e)
+            else:
+                for p in live:
+                    p.future.set_result(by_corpus[p.query.corpus])
+        with self._lock:                 # concurrent flushes race the stats
+            self.stats.count_flush(reason)
+            self.flush_log.append(FlushEvent(
+                reason=reason, kind=g.kind, l=g.l, n_queries=len(live),
+                n_corpora=len(names), at=now))
+
+    # ---------------------------------------------------------- threaded --
+    def start(self) -> "AsyncAnalyticsServer":
+        """Run the flush policy on a background daemon thread."""
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("queue is closed")
+            if self._thread is not None:
+                raise RuntimeError("serve thread already running")
+            self._stop.clear()
+            self._wake.clear()
+            self._thread = threading.Thread(target=self._serve_loop,
+                                            name="analytics-queue",
+                                            daemon=True)
+            self._thread.start()
+        return self
+
+    def close(self) -> None:
+        """Stop accepting queries, stop the serve thread (if any), and
+        drain the rest — a submit racing close either drains here or
+        raises, never hangs.  Idempotent; the queue stays closed."""
+        t = None
+        with self._lock:
+            self._closed = True
+            t, self._thread = self._thread, None
+        if t is not None:
+            self._stop.set()
+            self._wake.set()
+            t.join()
+        self.drain()
+
+    def _serve_loop(self) -> None:
+        while not self._stop.is_set():
+            nxt = self.poll()
+            now = self._now()
+            delay = self.poll_interval
+            if nxt is not None:
+                delay = min(delay, max(nxt - now, 0.0))
+            self._wake.wait(delay)
+            self._wake.clear()
+
+    def _kick(self) -> None:
+        if self._thread is not None:
+            self._wake.set()
+
+    def __enter__(self) -> "AsyncAnalyticsServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,0 +1,143 @@
+"""Decompress-then-scan oracle for the six TADOC analytics.
+
+TADOC (the CPU predecessor) validates every compressed-domain analytic
+against a baseline that simply decompresses the corpus and scans the raw
+token stream.  This module is that baseline: ``expand_range`` (or
+``Grammar.expand``) materializes the full terminal stream, plain numpy
+recomputes each analytic from it, and the differential suite
+(test_differential.py) asserts the compressed-domain engines — single
+corpus, batched segment_sum, batched ELL — agree exactly.
+
+Semantics replicated from the engine:
+
+* the stream interleaves word terminals (``< vocab_size``) with one unique
+  file-splitter terminal after each file (``compress_files``);
+* per-file analytics assign each inter-splitter segment to the file whose
+  splitter terminates it; trailing content with no splitter joins the last
+  file (mirrors ``grammar.flatten``'s ``_flush``);
+* sequence windows never cross a splitter;
+* ties in the sort / ranked-inverted-index orderings break by index
+  (stable argsort on negated counts, exactly like the engine).
+
+All counts are integer-valued and far below 2**24, so float32 arithmetic is
+exact in both domains — comparisons can demand bit equality.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.grammar import GrammarArrays, expand_range
+
+
+def full_stream(ga: GrammarArrays) -> np.ndarray:
+    """The whole terminal stream (words + splitters) via random-access
+    expansion from the root."""
+    return expand_range(ga, 0, int(ga.exp_len[0]))
+
+
+def stream_segments(ga: GrammarArrays,
+                    stream: np.ndarray | None = None) -> List[np.ndarray]:
+    """Word segments between file splitters, in stream order.
+
+    Segment i (for i < F) is terminated by file i's splitter; a trailing
+    segment (no terminator) may follow and belongs to the last file.
+    """
+    if stream is None:
+        stream = full_stream(ga)
+    is_split = (stream >= ga.vocab_size) & (stream < ga.num_terminals)
+    cuts = np.flatnonzero(is_split)
+    bounds = np.concatenate([[-1], cuts, [len(stream)]])
+    segs = [stream[bounds[i] + 1: bounds[i + 1]]
+            for i in range(len(bounds) - 1)]
+    if len(segs) and len(segs[-1]) == 0 and len(cuts) == ga.num_files:
+        segs.pop()                      # empty trailing pseudo-segment
+    return segs
+
+
+def _seg_file(ga: GrammarArrays, seg_idx: int) -> int:
+    return min(seg_idx, max(ga.num_files - 1, 0))
+
+
+def oracle_word_count(ga: GrammarArrays,
+                      stream: np.ndarray | None = None) -> np.ndarray:
+    if stream is None:
+        stream = full_stream(ga)
+    words = stream[stream < ga.vocab_size]
+    return np.bincount(words, minlength=ga.vocab_size).astype(np.float32)
+
+
+def oracle_sort(ga: GrammarArrays, stream: np.ndarray | None = None
+                ) -> Tuple[np.ndarray, np.ndarray]:
+    counts = oracle_word_count(ga, stream)
+    order = np.argsort(-counts, kind="stable")
+    return order, counts[order]
+
+
+def oracle_term_vector(ga: GrammarArrays,
+                       stream: np.ndarray | None = None) -> np.ndarray:
+    tv = np.zeros((ga.num_files, ga.vocab_size), np.float32)
+    for i, seg in enumerate(stream_segments(ga, stream)):
+        tv[_seg_file(ga, i)] += np.bincount(seg,
+                                            minlength=ga.vocab_size)
+    return tv
+
+
+def oracle_inverted_index(ga: GrammarArrays,
+                          stream: np.ndarray | None = None) -> np.ndarray:
+    return oracle_term_vector(ga, stream) > 0
+
+
+def oracle_ranked_inverted_index(ga: GrammarArrays,
+                                 stream: np.ndarray | None = None
+                                 ) -> Tuple[np.ndarray, np.ndarray]:
+    tv = oracle_term_vector(ga, stream)
+    order = np.argsort(-tv, axis=0, kind="stable")      # [F, V]
+    ranked = np.take_along_axis(tv, order, axis=0)
+    return order.T, ranked.T
+
+
+def oracle_sequence_count(ga: GrammarArrays, l: int = 3,
+                          stream: np.ndarray | None = None
+                          ) -> Tuple[np.ndarray, np.ndarray]:
+    wins = [np.lib.stride_tricks.sliding_window_view(seg, l)
+            for seg in stream_segments(ga, stream) if len(seg) >= l]
+    if not wins:
+        return np.zeros((0, l), np.int32), np.zeros(0, np.float32)
+    grams, counts = np.unique(np.concatenate(wins), axis=0,
+                              return_counts=True)
+    return grams.astype(np.int32), counts.astype(np.float32)
+
+
+def oracle(ga: GrammarArrays, kind: str, l: int = 3,
+           stream: np.ndarray | None = None):
+    """Recompute one analytics kind from the decompressed stream, shaped
+    exactly like the engine's output for that kind."""
+    if kind == "word_count":
+        return oracle_word_count(ga, stream)
+    if kind == "sort":
+        return oracle_sort(ga, stream)
+    if kind == "term_vector":
+        return oracle_term_vector(ga, stream)
+    if kind == "inverted_index":
+        return oracle_inverted_index(ga, stream)
+    if kind == "ranked_inverted_index":
+        return oracle_ranked_inverted_index(ga, stream)
+    if kind == "sequence_count":
+        return oracle_sequence_count(ga, l, stream)
+    raise ValueError(f"unknown analytics kind {kind!r}")
+
+
+def assert_result_equal(got, want, kind: str, context: str = "") -> None:
+    """Bit-exact comparison of an engine result against the oracle (tuple
+    kinds compare element-wise)."""
+    gots = got if isinstance(got, tuple) else (got,)
+    wants = want if isinstance(want, tuple) else (want,)
+    assert len(gots) == len(wants), (kind, context)
+    for part, (g, w) in enumerate(zip(gots, wants)):
+        np.testing.assert_array_equal(
+            np.asarray(g), np.asarray(w),
+            err_msg=f"{kind} part {part} diverged from the "
+                    f"decompress-then-scan oracle {context}")

@@ -198,6 +198,51 @@ def test_invalid_sequence_length_raises(server):
         srv.run([Query("c0", "sequence_count", l=0)])
 
 
+def test_word_count_l_variants_share_one_group(server):
+    """Regression: ``Query.l`` is a sequence_count parameter; stray values
+    on other kinds must neither split the group (extra batched calls) nor
+    leak into execution."""
+    srv, gas = server
+    before = srv.stats.batched_calls
+    res = srv.run([Query("c0", "word_count", l=3),
+                   Query("c1", "word_count", l=9),
+                   Query("c2", "word_count", l=5),
+                   Query("c3", "word_count", l=7)])
+    assert srv.stats.batched_calls == before + 1    # one group, one chunk
+    for i, name in enumerate(["c0", "c1", "c2", "c3"]):
+        np.testing.assert_allclose(res[i], np.asarray(word_count(gas[name])))
+
+
+def test_sequence_count_l_still_splits_groups(server):
+    srv, gas = server
+    before = srv.stats.groups
+    res = srv.run([Query("c0", "sequence_count", l=2),
+                   Query("c0", "sequence_count", l=3)])
+    assert srv.stats.groups == before + 2
+    for l, r in zip((2, 3), res):
+        g_s, c_s = sequence_count(gas["c0"], l=l, method="frontier")
+        assert np.array_equal(r[0], g_s)
+        np.testing.assert_allclose(r[1], c_s, rtol=1e-6)
+
+
+def test_group_key_normalizes_l():
+    assert (Query("a", "word_count", l=3).group_key()
+            == Query("a", "word_count", l=9).group_key())
+    assert Query("a", "word_count", l=9).effective_l() is None
+    assert (Query("a", "sequence_count", l=3).group_key()
+            != Query("a", "sequence_count", l=4).group_key())
+
+
+def test_execute_chunk_enforces_l_normalization(server):
+    srv, _ = server
+    with pytest.raises(ValueError):
+        srv.execute_chunk("word_count", ["c0"], l=5)     # stray l
+    with pytest.raises(ValueError):
+        srv.execute_chunk("sequence_count", ["c0"])      # missing l
+    with pytest.raises(ValueError):
+        srv.execute_chunk("word_count", [f"c{i}" for i in range(5)])
+
+
 def test_pack_cache_is_bounded_and_order_canonical():
     rng = np.random.default_rng(7)
     srv = AnalyticsServer(max_batch=2, max_cached_batches=2)

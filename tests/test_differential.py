@@ -1,0 +1,155 @@
+"""Differential suite: every analytic vs the decompress-then-scan oracle.
+
+TADOC's validation discipline: whatever the compressed-domain engine
+computes must equal a plain scan of the decompressed text.  The oracle
+(tests/_oracle.py) expands the grammar via ``Grammar.expand`` /
+``expand_range`` and recomputes all six ANALYTICS_KINDS with numpy; these
+tests assert bit-exact agreement on randomized grammars across the engine's
+execution paths:
+
+* single-corpus (``core.analytics``, frontier + leveled traversals);
+* batched segment_sum (``run_batched`` method ``frontier`` / ``leveled``);
+* batched ELL (``frontier_ell`` / ``leveled_ell`` — the dense edge plan).
+
+Runs without hypothesis via tests/_hypothesis_compat (fixed seeded
+examples); the ``slow``-marked test rescales the same check to larger
+grammars (CI's scheduled lane; ``DIFF_SCALE`` env var controls size).
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (ANALYTICS_KINDS, Grammar, GrammarBatch,
+                        compress_files, expand_range, flatten,
+                        inverted_index, ranked_inverted_index, run_batched,
+                        sequence_count, sort_words, term_vector, word_count)
+from _hypothesis_compat import given, settings, st
+from _oracle import assert_result_equal, full_stream, oracle
+from conftest import make_repetitive_files
+
+BATCHED_METHODS = ("frontier", "leveled", "frontier_ell", "leveled_ell")
+
+
+def _random_grammar(rng, scale: int = 1):
+    vocab = int(rng.integers(8, 30 * scale + 10))
+    n_files = int(rng.integers(1, 3 + scale))
+    files = make_repetitive_files(rng, vocab, n_files=n_files)
+    g, nf = compress_files(files, vocab)
+    return flatten(g, vocab, nf), g, files
+
+
+def _single(ga, kind, l=3, method="frontier"):
+    if kind == "word_count":
+        return np.asarray(word_count(ga, method=method))
+    if kind == "sort":
+        o, c = sort_words(ga, method=method)
+        return (np.asarray(o), np.asarray(c))
+    if kind == "term_vector":
+        return np.asarray(term_vector(ga, method=method))
+    if kind == "inverted_index":
+        return np.asarray(inverted_index(ga, method=method))
+    if kind == "ranked_inverted_index":
+        r, c = ranked_inverted_index(ga, method=method)
+        return (np.asarray(r), np.asarray(c))
+    if kind == "sequence_count":
+        return sequence_count(ga, l=l, method=method)
+    raise ValueError(kind)
+
+
+def test_expansion_matches_original_corpus(seeded_rng):
+    """The oracle's input is itself differential: the decompressed stream
+    must reproduce the raw files (words + per-file splitters) and the two
+    expansion APIs must agree."""
+    ga, g, files = _random_grammar(seeded_rng)
+    parts = []
+    for i, f in enumerate(files):
+        parts.append(np.asarray(f, np.int64))
+        parts.append(np.array([ga.vocab_size + i], np.int64))
+    raw = np.concatenate(parts)
+    np.testing.assert_array_equal(g.expand(0), raw)
+    np.testing.assert_array_equal(full_stream(ga), raw)
+    # windowed random access agrees with the full expansion
+    lo = len(raw) // 3
+    np.testing.assert_array_equal(expand_range(ga, lo, len(raw) // 2),
+                                  raw[lo: lo + len(raw) // 2])
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 100_000))
+def test_single_corpus_paths_match_oracle(seed):
+    rng = np.random.default_rng(seed)
+    ga, _, _ = _random_grammar(rng)
+    stream = full_stream(ga)
+    for kind in ANALYTICS_KINDS:
+        want = oracle(ga, kind, stream=stream)
+        for method in ("frontier", "leveled"):
+            assert_result_equal(_single(ga, kind, method=method), want,
+                                kind, f"(single, {method}, seed={seed})")
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 100_000))
+def test_batched_paths_match_oracle(seed):
+    """All six analytics, four batched execution paths (segment_sum COO and
+    dense ELL, frontier and leveled), ragged 3-corpus packs."""
+    rng = np.random.default_rng(seed)
+    gas = [_random_grammar(rng)[0] for _ in range(3)]
+    gb = GrammarBatch.build(gas)
+    streams = [full_stream(ga) for ga in gas]
+    for kind in ANALYTICS_KINDS:
+        wants = [oracle(ga, kind, stream=s) for ga, s in zip(gas, streams)]
+        for method in BATCHED_METHODS:
+            got = run_batched(gb, kind, method=method, l=3)
+            for i, (g_i, w_i) in enumerate(zip(got, wants)):
+                assert_result_equal(
+                    g_i, w_i, kind,
+                    f"(batched {method}, corpus {i}, seed={seed})")
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(2, 5), st.integers(0, 100_000))
+def test_sequence_count_window_lengths_match_oracle(l, seed):
+    rng = np.random.default_rng(seed)
+    gas = [_random_grammar(rng)[0] for _ in range(2)]
+    wants = [oracle(ga, "sequence_count", l=l) for ga in gas]
+    for ga, want in zip(gas, wants):
+        assert_result_equal(sequence_count(ga, l=l, method="frontier"),
+                            want, "sequence_count", f"(single, l={l})")
+    gb = GrammarBatch.build(gas)
+    for method in ("frontier", "frontier_ell"):
+        got = run_batched(gb, "sequence_count", method=method, l=l)
+        for g_i, w_i in zip(got, wants):
+            assert_result_equal(g_i, w_i, "sequence_count",
+                                f"(batched {method}, l={l}, seed={seed})")
+
+
+@pytest.mark.slow
+def test_differential_slow_larger_grammars(seeded_rng):
+    """Same oracle check at larger grammar sizes (scheduled CI lane);
+    ``DIFF_SCALE`` scales corpus size, default 3."""
+    from repro.data.synthetic import CorpusSpec, make_corpus
+
+    scale = int(os.environ.get("DIFF_SCALE", "3"))
+    gas = []
+    for i in range(3):
+        spec = CorpusSpec(f"diff{i}", n_files=2 + scale,
+                          tokens_per_file=400 * scale, vocab=120 * scale,
+                          phrase_rate=0.55, n_phrases=30, phrase_len=7,
+                          seed=int(seeded_rng.integers(1 << 31)))
+        files = make_corpus(spec)
+        g, nf = compress_files(files, spec.vocab)
+        gas.append(flatten(g, spec.vocab, nf))
+    gb = GrammarBatch.build(gas)
+    streams = [full_stream(ga) for ga in gas]
+    for kind in ANALYTICS_KINDS:
+        wants = [oracle(ga, kind, stream=s) for ga, s in zip(gas, streams)]
+        for ga, want in zip(gas, wants):
+            assert_result_equal(_single(ga, kind), want, kind,
+                                "(single, slow)")
+        for method in ("frontier", "frontier_ell", "leveled_ell"):
+            got = run_batched(gb, kind, method=method, l=3)
+            for g_i, w_i in zip(got, wants):
+                assert_result_equal(g_i, w_i, kind,
+                                    f"(batched {method}, slow)")
