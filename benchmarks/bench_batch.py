@@ -9,9 +9,18 @@ modes fully warmed/compiled before measurement).
 
 Also emits ``batch/traversal/{segment_sum,ell,ell_speedup}``: the batched
 frontier rounds on the COO segment_sum path vs the dense ELL edge plan
-(scatter-free gather form — core/batch.py DESIGN note).  ``run`` returns
-the full timing dict; ``benchmarks.run`` serializes it to BENCH_batch.json
-so CI tracks the perf trajectory across PRs.
+(scatter-free gather form — core/batch.py DESIGN note).
+
+``shard/*`` rows time the device-sharded pack (distributed/shard_batch.py)
+against the single-device pack on the same corpora: ``shard/<app>/single``
+vs ``shard/<app>/sharded`` plus a ``speedup`` row, and the ``devices``
+field records how many devices the mesh actually spanned (1 = no mesh
+visible, rows then measure the transparent fallback and speedup ~1).  Run
+under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to exercise a
+real 8-way mesh on CPU — CI's multidevice lane does.
+
+``run`` returns the full timing dict; ``benchmarks.run`` serializes it to
+BENCH_batch.json so CI tracks the perf trajectory across PRs.
 """
 
 from __future__ import annotations
@@ -24,6 +33,7 @@ import numpy as np
 from repro.core import (GrammarArrays, GrammarBatch, batched_term_vector,
                         batched_top_down_weights, batched_word_count,
                         compress_files, flatten, term_vector, word_count)
+from repro.distributed.shard_batch import corpus_mesh, mesh_size, shard_batch
 
 from .common import emit, timeit
 
@@ -99,6 +109,33 @@ def run(smoke: bool = False) -> dict:
     out["ell_vs_segment_sum"] = {
         "segment_sum_us": t_seg * 1e6, "ell_us": t_ell * 1e6,
         "speedup": ell_speedup}
+
+    # ----- device-sharded pack vs single-device pack (same corpora) -----
+    mesh = corpus_mesh()
+    devices = mesh_size(mesh)
+    gb_sh = shard_batch(gas, mesh)      # == gb placement when mesh is None
+    out["sharded"] = {"devices": devices, "n": n, "apps": {}}
+    for app, one_fn, sh_fn in (
+            ("word_count",
+             lambda: jax.block_until_ready(batched_word_count(gb)),
+             lambda: jax.block_until_ready(batched_word_count(gb_sh))),
+            ("traversal",
+             lambda: jax.block_until_ready(
+                 batched_top_down_weights(gb, method="frontier")),
+             lambda: jax.block_until_ready(
+                 batched_top_down_weights(gb_sh, method="frontier"))),
+            ("term_vector",
+             lambda: jax.block_until_ready(batched_term_vector(gb)),
+             lambda: jax.block_until_ready(batched_term_vector(gb_sh)))):
+        t_one = timeit(one_fn, repeat=3, warmup=1)
+        t_sh = timeit(sh_fn, repeat=3, warmup=1)
+        sh_speedup = t_one / max(t_sh, 1e-12)
+        emit(f"shard/{app}/single", t_one, f"n={n}")
+        emit(f"shard/{app}/sharded", t_sh, f"n={n};devices={devices}")
+        emit(f"shard/{app}/speedup", 0.0, f"{sh_speedup:.2f}x")
+        out["sharded"]["apps"][app] = {
+            "single_us": t_one * 1e6, "sharded_us": t_sh * 1e6,
+            "speedup": sh_speedup}
     return out
 
 

@@ -44,18 +44,44 @@ leveled variant replays the same plan once per level with the mask
 ``level[parent] == lv`` — each real edge still contributes exactly once,
 at its parent's level.  Per-file traversals keep the segment_sum path
 (their payload is a [R, F] vector per rule; the ELL kernels are scalar).
+
+DESIGN — device-sharded batches (:meth:`GrammarBatch.shard`): the corpus
+axis N is embarrassingly parallel (every traversal above is a vmap over
+it), so a pack placed with ``NamedSharding(mesh, P(CORPUS_AXIS, ...))``
+splits row-wise across a 1-D device mesh and the same analytics run as one
+jitted program spanning all devices.  The frontier engines (a
+``while_loop`` whose stop flag is ``mask.any()``) are wrapped in
+``shard_map`` so each shard's loop stops when *its own* corpora finish —
+no per-round cross-device all-reduce, and each shard executes exactly the
+single-device program on its ``[N/D, ...]`` slice, which keeps results
+bit-identical to the unsharded path (all counts are integer-valued and far
+below 2**24, so float32 arithmetic is exact in any summation order).  The
+leveled engines (static schedule, no loop) shard by placement alone.
+Sharding requires N to be a multiple of the mesh size;
+:mod:`repro.distributed.shard_batch` pads a corpus list to that multiple
+(``n_real`` tracks how many rows are real — finalization and
+:func:`unbatch` never surface padding rows).  Per-shard pack signatures
+are identical by construction (same padded dims on every shard), so
+recurring sharded traffic reuses compiled programs exactly like the
+single-device pack cache.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from dataclasses import dataclass
 from dataclasses import field as dataclass_field
-from typing import List, Sequence, Tuple
+from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+try:
+    from jax import shard_map  # jax >= 0.8 canonical location
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map
 
 from .grammar import GrammarArrays, pow2_bucket as _pow2_bucket
 from . import sequence as _sequence
@@ -65,6 +91,11 @@ from .sequence import _K_HEAD, _K_LIT, _K_TAIL
 # ----------------------------------------------------------------------- #
 # Packed layout                                                            #
 # ----------------------------------------------------------------------- #
+#: Mesh axis name the corpus dimension N shards over (1-D device mesh,
+#: built by repro.distributed.shard_batch.corpus_mesh).
+CORPUS_AXIS = "corpus"
+
+
 def _round_up_pow2(x: int, minimum: int = 8) -> int:
     if x <= minimum:
         return minimum
@@ -125,6 +156,12 @@ class GrammarBatch:
     lv_freq: jnp.ndarray                # [N, EL] float32 (0 on padding)
     lv_slices: Tuple[Tuple[int, int], ...]   # shared (start, end) per level
 
+    # device-sharded execution (module DESIGN note): a 1-D jax Mesh whose
+    # CORPUS_AXIS splits the N axis row-wise, and the count of *real* rows
+    # when the pack was padded up to a mesh multiple (None: all rows real)
+    mesh: Any = None
+    n_real: Optional[int] = None
+
     # per-batch memo for host-side sequence plans (mutable contents are
     # fine on a frozen dataclass; keyed by window length l)
     _plan_cache: dict = dataclass_field(default_factory=dict, repr=False,
@@ -135,11 +172,76 @@ class GrammarBatch:
         return len(self.gas)
 
     @property
+    def real(self) -> int:
+        """Rows that correspond to real corpora (the rest is shard padding;
+        their results are computed and discarded, never surfaced)."""
+        return self.n if self.n_real is None else self.n_real
+
+    @property
+    def real_gas(self) -> Tuple[GrammarArrays, ...]:
+        return self.gas[: self.real]
+
+    @property
+    def shards(self) -> int:
+        """Device count the pack spans (1 when unsharded)."""
+        return 1 if self.mesh is None else int(self.mesh.size)
+
+    @property
     def signature(self) -> Tuple[int, ...]:
         """Compilation signature: batches with equal signatures (and equal
-        ``lv_slices`` for the leveled engine) reuse jitted programs."""
+        ``lv_slices`` for the leveled engine) reuse jitted programs.  The
+        trailing element is the shard count — a sharded pack compiles a
+        different (partitioned) program than a single-device pack of the
+        same shape."""
         return (self.n, self.R_pad, self.E_pad, self.T_pad, self.F_pad,
-                self.V_pad, int(self.fedge_file.shape[1]), self.Tf_pad)
+                self.V_pad, int(self.fedge_file.shape[1]), self.Tf_pad,
+                self.shards)
+
+    # ------------------------------------------------------------- shard --
+    def _placement(self, ndim: int):
+        """NamedSharding splitting the leading (corpus) axis, or None when
+        the pack is unsharded."""
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, P(CORPUS_AXIS, *([None] * (ndim - 1))))
+
+    def _place(self, arr) -> jnp.ndarray:
+        """Put one [N, ...] array where the pack lives: sharded row-wise
+        across ``mesh`` (lazy plan arrays must land with the same placement
+        as the packed arrays, or every sharded call pays a reshard)."""
+        sh = self._placement(np.ndim(arr))
+        a = jnp.asarray(arr)
+        return a if sh is None else jax.device_put(a, sh)
+
+    def shard(self, mesh, n_real: Optional[int] = None) -> "GrammarBatch":
+        """Re-place every packed device array row-sharded over ``mesh``.
+
+        ``mesh`` must be a 1-D mesh over axis ``CORPUS_AXIS`` whose size
+        divides N (use :func:`repro.distributed.shard_batch.shard_batch` to
+        pad an arbitrary corpus list up to the multiple).  Returns a new
+        :class:`GrammarBatch`; lazy plans (ELL, sequence) are rebuilt on
+        demand with the sharded placement.
+        """
+        if tuple(mesh.axis_names) != (CORPUS_AXIS,):
+            raise ValueError(f"mesh must be 1-D over axis {CORPUS_AXIS!r}, "
+                             f"got axes {tuple(mesh.axis_names)}")
+        d = int(mesh.shape[CORPUS_AXIS])
+        if self.n % d:
+            raise ValueError(
+                f"batch of {self.n} corpora does not divide across {d} "
+                f"devices; pad first (distributed.shard_batch.shard_batch)")
+        if n_real is not None and not (0 < n_real <= self.n):
+            raise ValueError(f"n_real={n_real} out of range for N={self.n}")
+        sharded = dataclasses.replace(
+            self, mesh=mesh,
+            n_real=self.n_real if n_real is None else n_real,
+            _plan_cache={})
+        # re-place the packed [N, ...] device arrays row-sharded
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if isinstance(v, jnp.ndarray):
+                object.__setattr__(sharded, f.name, sharded._place(v))
+        return sharded
 
     @property
     def total_edges(self) -> int:
@@ -182,7 +284,7 @@ class GrammarBatch:
                 freq[i, : ga.num_rules] = f
                 level[i, : ga.num_rules] = ga.level
             self._plan_cache[key] = (
-                jnp.asarray(src), jnp.asarray(freq), jnp.asarray(level),
+                self._place(src), self._place(freq), self._place(level),
                 max(ga.num_levels for ga in self.gas))
         return self._plan_cache[key]
 
@@ -290,8 +392,32 @@ class GrammarBatch:
 # ----------------------------------------------------------------------- #
 # Batched traversals                                                       #
 # ----------------------------------------------------------------------- #
-@jax.jit
-def _frontier_weights_batched(ep, ec, ef, valid, in_deg):
+@functools.lru_cache(maxsize=None)
+def _sharded_program(fn, mesh, in_ndims: Tuple[int, ...], out_ndim: int,
+                     static: Tuple[Tuple[str, Any], ...] = ()):
+    """``jit(shard_map(fn))`` splitting every array's leading corpus axis.
+
+    Each shard runs ``fn`` — the exact single-device program — on its
+    ``[N/D, ...]`` row slice; nothing crosses shards, so a frontier
+    ``while_loop`` inside ``fn`` stops as soon as the shard's own corpora
+    finish instead of spinning until the globally slowest one does.
+    Memoized per (fn, mesh, shapes, statics) so recurring sharded calls
+    reach jit's compile cache instead of rebuilding a fresh (cache-missing)
+    wrapper each time; ``static`` binds hashable keyword args (level
+    schedules, padded dims) before wrapping.
+    """
+    bound = functools.partial(fn, **dict(static)) if static else fn
+
+    def spec(nd: int) -> P:
+        return P(CORPUS_AXIS, *([None] * (nd - 1)))
+
+    sm = shard_map(bound, mesh=mesh,
+                   in_specs=tuple(spec(nd) for nd in in_ndims),
+                   out_specs=spec(out_ndim), check_rep=False)
+    return jax.jit(sm)
+
+
+def _frontier_weights_impl(ep, ec, ef, valid, in_deg):
     """vmap of the masked frontier rounds; one shared while_loop.
 
     The vmapped ``while_loop`` runs until every corpus's mask is empty;
@@ -326,8 +452,10 @@ def _frontier_weights_batched(ep, ec, ef, valid, in_deg):
     return jax.vmap(one)(ep, ec, ef, valid, in_deg)
 
 
-@functools.partial(jax.jit, static_argnames=("slices", "R"))
-def _leveled_weights_batched(ep, ec, ef, slices, R):
+_frontier_weights_batched = jax.jit(_frontier_weights_impl)
+
+
+def _leveled_weights_impl(ep, ec, ef, slices, R):
     """Shared static level schedule; each real edge touched exactly once
     (padded slots have freq 0)."""
     N = ep.shape[0]
@@ -341,8 +469,11 @@ def _leveled_weights_batched(ep, ec, ef, slices, R):
     return w
 
 
-@jax.jit
-def _frontier_weights_batched_ell(ell_src, ell_freq, in_deg):
+_leveled_weights_batched = jax.jit(_leveled_weights_impl,
+                                   static_argnames=("slices", "R"))
+
+
+def _frontier_ell_impl(ell_src, ell_freq, in_deg):
     """Masked frontier rounds over the dense ELL plan: every round is ONE
     fused gather + row-sum (no scatter), with delta and the seen-counter
     emitted by the same kernels.ops.ell_propagate_batched call."""
@@ -370,8 +501,10 @@ def _frontier_weights_batched_ell(ell_src, ell_freq, in_deg):
     return weight
 
 
-@functools.partial(jax.jit, static_argnames=("num_levels",))
-def _leveled_weights_batched_ell(ell_src, ell_freq, level, num_levels):
+_frontier_weights_batched_ell = jax.jit(_frontier_ell_impl)
+
+
+def _leveled_ell_impl(ell_src, ell_freq, level, num_levels):
     """Static level schedule over the dense ELL plan: level lv's round
     activates exactly the parents at that level, so each real edge
     contributes once, at its parent's level (padded slots: level -1)."""
@@ -386,6 +519,10 @@ def _leveled_weights_batched_ell(ell_src, ell_freq, level, num_levels):
     return w
 
 
+_leveled_weights_batched_ell = jax.jit(_leveled_ell_impl,
+                                       static_argnames=("num_levels",))
+
+
 def batched_top_down_weights(gb: GrammarBatch,
                              method: str = "frontier") -> jnp.ndarray:
     """weights[i, r] == occurrences of corpus i's rule r. Shape [N, R_pad].
@@ -393,11 +530,18 @@ def batched_top_down_weights(gb: GrammarBatch,
     Methods: ``frontier`` / ``leveled`` (COO + segment_sum),
     ``frontier_ell`` / ``leveled_ell`` (dense ELL plan, scatter-free), and
     ``auto`` (occupancy dispatch via kernels.ops.ell_batched_use_ref).
+    Sharded packs (``gb.mesh``) run the same methods through
+    ``shard_map`` — each device traverses its own corpus rows (module
+    DESIGN note), results bit-identical to the unsharded program.
     """
     if method == "auto":
         from repro.kernels import ops as kops
+        # occupancy is per shard: a sharded pack's launch covers N/D rows
+        # per device, so the edge/row counts the predicate weighs are the
+        # per-shard ones
         method = ("frontier" if kops.ell_batched_use_ref(
-            gb.total_edges, gb.n, gb.R_pad, gb.ell_plan_width())
+            gb.total_edges, gb.n, gb.R_pad, gb.ell_plan_width(),
+            shards=gb.shards)
             else "frontier_ell")
     if method in ("frontier_ell", "leveled_ell"):
         from repro.kernels import ops as kops
@@ -411,24 +555,40 @@ def batched_top_down_weights(gb: GrammarBatch,
             # (identical results).
             method = "frontier" if method == "frontier_ell" else "leveled"
     if method in ("frontier", "top_down", "bottom_up"):
+        if gb.mesh is not None:
+            return _sharded_program(_frontier_weights_impl, gb.mesh,
+                                    (2, 2, 2, 2, 2), 2)(
+                gb.edge_parent, gb.edge_child, gb.edge_freq, gb.edge_valid,
+                gb.in_deg)
         return _frontier_weights_batched(
             gb.edge_parent, gb.edge_child, gb.edge_freq, gb.edge_valid,
             gb.in_deg)
     if method == "leveled":
+        if gb.mesh is not None:
+            return _sharded_program(
+                _leveled_weights_impl, gb.mesh, (2, 2, 2), 2,
+                static=(("slices", gb.lv_slices), ("R", gb.R_pad)))(
+                gb.lv_parent, gb.lv_child, gb.lv_freq)
         return _leveled_weights_batched(
             gb.lv_parent, gb.lv_child, gb.lv_freq, gb.lv_slices, gb.R_pad)
     if method == "frontier_ell":
         src, freq, _, _ = gb.ell_plan()
+        if gb.mesh is not None:
+            return _sharded_program(_frontier_ell_impl, gb.mesh,
+                                    (3, 3, 2), 2)(src, freq, gb.in_deg)
         return _frontier_weights_batched_ell(src, freq, gb.in_deg)
     if method == "leveled_ell":
         src, freq, level, num_levels = gb.ell_plan()
+        if gb.mesh is not None:
+            return _sharded_program(
+                _leveled_ell_impl, gb.mesh, (3, 3, 2), 2,
+                static=(("num_levels", num_levels),))(src, freq, level)
         return _leveled_weights_batched_ell(src, freq, level, num_levels)
     raise ValueError(f"unknown batched traversal method {method!r}")
 
 
-@functools.partial(jax.jit, static_argnames=("F",))
-def _per_file_weights_batched(ep, ec, ef, valid, in_deg, root_seen,
-                              fedge_child, fedge_file, fedge_freq, F):
+def _per_file_frontier_impl(ep, ec, ef, valid, in_deg, root_seen,
+                            fedge_child, fedge_file, fedge_freq, F):
     R = in_deg.shape[1]
 
     def one(ep, ec, ef, valid, in_deg, root_seen, fc, ff, fq):
@@ -460,9 +620,12 @@ def _per_file_weights_batched(ep, ec, ef, valid, in_deg, root_seen,
                          fedge_child, fedge_file, fedge_freq)
 
 
-@functools.partial(jax.jit, static_argnames=("slices", "R", "F"))
-def _per_file_leveled_batched(ep, ec, ef, fedge_child, fedge_file,
-                              fedge_freq, slices, R, F):
+_per_file_weights_batched = jax.jit(_per_file_frontier_impl,
+                                    static_argnames=("F",))
+
+
+def _per_file_leveled_impl(ep, ec, ef, fedge_child, fedge_file,
+                           fedge_freq, slices, R, F):
     """Leveled per-file traversal: root edges are consumed by the per-file
     init (splitter segments), so every non-root edge is touched once.
     Padded slots have ``parent == 0`` and are excluded by the same gate."""
@@ -481,22 +644,42 @@ def _per_file_leveled_batched(ep, ec, ef, fedge_child, fedge_file,
     return W
 
 
+_per_file_leveled_batched = jax.jit(_per_file_leveled_impl,
+                                    static_argnames=("slices", "R", "F"))
+
+
 def batched_per_file_weights(gb: GrammarBatch,
                              method: str = "frontier") -> jnp.ndarray:
     """Wf[i, r, f] == occurrences of rule r inside file f of corpus i.
 
     The ELL methods map to their segment_sum bases here: the per-file
     payload is a [R, F] vector per rule and the ELL kernels are scalar
-    (see module DESIGN note).
+    (see module DESIGN note).  Sharded packs run through ``shard_map``
+    like the scalar traversals.
     """
     method = {"frontier_ell": "frontier", "leveled_ell": "leveled"}.get(
         method, method)
     if method in ("frontier", "auto", "top_down", "bottom_up"):
+        if gb.mesh is not None:
+            return _sharded_program(
+                _per_file_frontier_impl, gb.mesh,
+                (2, 2, 2, 2, 2, 2, 2, 2, 2), 3,
+                static=(("F", gb.F_pad),))(
+                gb.edge_parent, gb.edge_child, gb.edge_freq, gb.edge_valid,
+                gb.in_deg, gb.root_seen, gb.fedge_child, gb.fedge_file,
+                gb.fedge_freq)
         return _per_file_weights_batched(
             gb.edge_parent, gb.edge_child, gb.edge_freq, gb.edge_valid,
             gb.in_deg, gb.root_seen, gb.fedge_child, gb.fedge_file,
             gb.fedge_freq, gb.F_pad)
     if method == "leveled":
+        if gb.mesh is not None:
+            return _sharded_program(
+                _per_file_leveled_impl, gb.mesh, (2, 2, 2, 2, 2, 2), 3,
+                static=(("slices", gb.lv_slices), ("R", gb.R_pad),
+                        ("F", gb.F_pad)))(
+                gb.lv_parent, gb.lv_child, gb.lv_freq, gb.fedge_child,
+                gb.fedge_file, gb.fedge_freq)
         return _per_file_leveled_batched(
             gb.lv_parent, gb.lv_child, gb.lv_freq, gb.fedge_child,
             gb.fedge_file, gb.fedge_freq, gb.lv_slices, gb.R_pad, gb.F_pad)
@@ -533,7 +716,7 @@ def batched_sort_words(gb: GrammarBatch, method: str = "frontier",
     results match :func:`repro.core.analytics.sort_words` exactly."""
     wc = batched_word_count(gb, method=method, backend=backend)
     out = []
-    for i, ga in enumerate(gb.gas):
+    for i, ga in enumerate(gb.real_gas):
         counts = wc[i, : ga.vocab_size]
         order = jnp.argsort(-counts, stable=True)
         out.append((order, counts[order]))
@@ -573,7 +756,7 @@ def batched_ranked_inverted_index(gb: GrammarBatch, method: str = "frontier"
     per-corpus shapes out (matches the single-corpus function exactly)."""
     tv = batched_term_vector(gb, method=method)
     out = []
-    for i, ga in enumerate(gb.gas):
+    for i, ga in enumerate(gb.real_gas):
         tvi = tv[i, : ga.num_files, : ga.vocab_size]
         order = jnp.argsort(-tvi, axis=0, stable=True)
         ranked = jnp.take_along_axis(tvi, order, axis=0)
@@ -583,9 +766,10 @@ def batched_ranked_inverted_index(gb: GrammarBatch, method: str = "frontier"
 
 def unbatch(gb: GrammarBatch, packed: jnp.ndarray,
             kind: str = "word_count") -> List[np.ndarray]:
-    """Slice a packed ``[N, ...]`` result back to per-corpus true shapes."""
+    """Slice a packed ``[N, ...]`` result back to per-corpus true shapes
+    (shard-padding rows, if any, are dropped)."""
     out = []
-    for i, ga in enumerate(gb.gas):
+    for i, ga in enumerate(gb.real_gas):
         if kind == "word_count":
             out.append(np.asarray(packed[i, : ga.vocab_size]))
         elif kind in ("term_vector", "inverted_index"):
@@ -677,7 +861,7 @@ def _padded_sequence_plans(gb: GrammarBatch, l: int):
         for i, p in enumerate(htps):
             a = get_arr(p)
             out[i, : a.shape[0], : a.shape[1]] = a
-        return jnp.asarray(out)
+        return gb._place(out)
 
     def _resolve(side: str) -> jnp.ndarray:
         return _resolve_buffers_batched(
@@ -696,16 +880,16 @@ def _padded_sequence_plans(gb: GrammarBatch, l: int):
     for i, p in enumerate(sps):
         win_valid[i, : len(p.win_start)] = True
     stream = (
-        jnp.asarray(_pad_stack([p.st_kind for p in sps], S_pad,
-                               fill=_sequence._K_BREAK, dtype=np.int8)),
-        jnp.asarray(_pad_stack([p.st_lit for p in sps], S_pad,
-                               fill=_sequence._BREAK)),
-        jnp.asarray(_pad_stack([p.st_src for p in sps], S_pad)),
-        jnp.asarray(_pad_stack([p.st_idx for p in sps], S_pad)),
-        jnp.asarray(_pad_stack([p.st_symj for p in sps], S_pad)),
-        jnp.asarray(_pad_stack([p.win_start for p in sps], W_pad)),
-        jnp.asarray(_pad_stack([p.win_rule for p in sps], W_pad)),
-        jnp.asarray(win_valid))
+        gb._place(_pad_stack([p.st_kind for p in sps], S_pad,
+                             fill=_sequence._K_BREAK, dtype=np.int8)),
+        gb._place(_pad_stack([p.st_lit for p in sps], S_pad,
+                             fill=_sequence._BREAK)),
+        gb._place(_pad_stack([p.st_src for p in sps], S_pad)),
+        gb._place(_pad_stack([p.st_idx for p in sps], S_pad)),
+        gb._place(_pad_stack([p.st_symj for p in sps], S_pad)),
+        gb._place(_pad_stack([p.win_start for p in sps], W_pad)),
+        gb._place(_pad_stack([p.win_rule for p in sps], W_pad)),
+        gb._place(win_valid))
     gb._plan_cache[l] = (head, tail, stream)
     return gb._plan_cache[l]
 
@@ -718,7 +902,6 @@ def batched_sequence_count(gb: GrammarBatch, l: int = 3,
     final distinct-gram extraction is per corpus (ragged output)."""
     if l < 2:
         raise ValueError("sequence_count needs l >= 2")
-    N = gb.n
     weights = batched_top_down_weights(gb, method=method)
     head, tail, stream = _padded_sequence_plans(gb, l)
     stok, seg, counts = _count_windows_batched(head, tail, weights,
@@ -728,7 +911,7 @@ def batched_sequence_count(gb: GrammarBatch, l: int = 3,
     seg_h = np.asarray(seg)
     counts_h = np.asarray(counts)
     out: List[Tuple[np.ndarray, np.ndarray]] = []
-    for i in range(N):
+    for i in range(gb.real):
         n_seg = int(seg_h[i, -1]) + 1
         first_idx = np.searchsorted(seg_h[i], np.arange(n_seg), "left")
         grams = stok_h[i][first_idx]

@@ -95,8 +95,8 @@ def _top_down_frontier_ell(ga: GrammarArrays) -> jnp.ndarray:
     the jitted loop (and its compilation cache) is shared with the batched
     engine; each round is ONE fused ``kernels.ops.ell_propagate_batched``
     call with no scatter (row index == destination rule).  The blocked
-    kernels stream weight vectors of any size through VMEM, so there is no
-    rule-count cliff (the old ELL_VMEM_WEIGHT_LIMIT).  Skewed grammars
+    kernels stream weight vectors of any size through VMEM in grid-blocked
+    chunks, so there is no rule-count cliff.  Skewed grammars
     whose plan width would exceed ELL_BATCH_MAX_WIDTH take the COO
     frontier instead (the dense plan is O(R * K) memory).
     """

@@ -1,10 +1,15 @@
-"""Distribution: sharding policy, pipeline stages, elastic re-mesh."""
+"""Distribution: sharding policy, pipeline stages, elastic re-mesh, and
+device-sharded execution of the batched analytics engine (shard_batch)."""
 
 from .sharding import (MeshRules, default_rules, spec_for, param_shardings,
                        batch_shardings, batch_spec, cache_shardings,
                        replicated)
 from .elastic import reshard_tree, elastic_pipeline
+from .shard_batch import (CORPUS_AXIS, corpus_mesh, mesh_size, pad_corpora,
+                          shard_batch, run_sharded)
 
 __all__ = ["MeshRules", "default_rules", "spec_for", "param_shardings",
            "batch_shardings", "batch_spec", "cache_shardings", "replicated",
-           "reshard_tree", "elastic_pipeline"]
+           "reshard_tree", "elastic_pipeline",
+           "CORPUS_AXIS", "corpus_mesh", "mesh_size", "pad_corpora",
+           "shard_batch", "run_sharded"]

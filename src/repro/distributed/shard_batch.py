@@ -1,0 +1,145 @@
+"""Device-sharded execution of :class:`~repro.core.batch.GrammarBatch`.
+
+G-TADOC's scaling argument is that compressed-domain analytics saturate
+massively parallel hardware once the dependent work is partitioned across
+execution units.  Within one device the batched engine already does this
+(vmapped traversals over the packed corpus axis N); this module is the next
+rung: split the SAME packed arrays row-wise across every local device, so
+one jitted program spans the whole mesh and the batch dimension — not the
+model — is what scales.
+
+How it works
+------------
+* :func:`corpus_mesh` builds a 1-D :class:`jax.sharding.Mesh` over the
+  local devices with axis ``CORPUS_AXIS`` (``"corpus"``).  Fewer than two
+  devices -> ``None``, and every entry point below falls back to the
+  plain single-device pack — callers never branch on device count.
+* :func:`pad_corpora` pads a corpus list up to a multiple of the shard
+  count by repeating the smallest grammar in the list.  Reusing a real
+  grammar keeps every padded dim (R_pad, E_pad, ...) unchanged, so any
+  two sharded packs whose corpora land in the same buckets share one
+  signature (and therefore one compiled program) regardless of how much
+  padding each needed; the padding rows' results are computed and
+  discarded (``GrammarBatch.n_real``).
+* :func:`shard_batch` = pad + :meth:`GrammarBatch.build` +
+  :meth:`GrammarBatch.shard`: the packed ``[N, ...]`` arrays are placed
+  with ``NamedSharding(mesh, P(CORPUS_AXIS, ...))`` and the traversal
+  engines in :mod:`repro.core.batch` notice ``gb.mesh`` and run through
+  ``shard_map`` — each device's frontier ``while_loop`` stops when its own
+  corpora finish, with no cross-device synchronization per round.
+* :func:`run_sharded` is the one-call convenience: corpora in, per-corpus
+  results out, bit-identical to ``run_batched`` on one device (asserted
+  against the decompress-then-scan oracle in tests/_shard_worker.py).
+
+Why bit-identical is cheap to promise: corpus rows never interact in any
+of the six analytics, each shard executes the very program a single device
+would run on its row slice, and all counts are integers far below 2**24 —
+float32 arithmetic is exact regardless of partitioning.
+
+The serving layer (:mod:`repro.serving.analytics_server`) selects sharded
+packs by group size (``shard_min_corpora``), and the async queue's
+``target_shards`` knob lets large flushes split across devices instead of
+serializing ``max_batch``-sized chunks.
+
+CPU CI exercises real multi-device semantics via
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (see
+.github/workflows/ci.yml, job ``multidevice``).
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core.batch import CORPUS_AXIS, GrammarBatch, run_batched
+from repro.core.grammar import GrammarArrays
+
+__all__ = ["CORPUS_AXIS", "corpus_mesh", "mesh_size", "pad_corpora",
+           "shard_batch", "run_sharded"]
+
+
+def corpus_mesh(devices: Optional[Sequence] = None,
+                max_shards: Optional[int] = None) -> Optional[Mesh]:
+    """1-D mesh over the local devices, axis ``CORPUS_AXIS``.
+
+    Returns ``None`` when fewer than two devices are visible (the
+    single-device fallback: callers treat ``mesh=None`` as "run the plain
+    pack"), so importing this module never changes behaviour on a laptop
+    or a single-chip host.  ``max_shards`` caps how many devices join the
+    mesh (benchmarks use it to scale shard count).
+    """
+    devices = list(jax.devices() if devices is None else devices)
+    if max_shards is not None:
+        if max_shards < 1:
+            raise ValueError("max_shards must be >= 1")
+        devices = devices[:max_shards]
+    if len(devices) < 2:
+        return None
+    return Mesh(np.array(devices), (CORPUS_AXIS,))
+
+
+def mesh_size(mesh: Optional[Mesh]) -> int:
+    """Device count of a corpus mesh (1 for the ``None`` fallback)."""
+    return 1 if mesh is None else int(mesh.size)
+
+
+def pad_corpora(gas: Sequence[GrammarArrays], multiple: int
+                ) -> Tuple[List[GrammarArrays], int]:
+    """Pad ``gas`` to a length divisible by ``multiple``.
+
+    Padding repeats the smallest grammar (by rule count) already in the
+    list: no padded dim grows (every max over the batch is unchanged), so
+    sharded packs of same-bucket corpus compositions share a signature and
+    a compiled program no matter how much padding each needed — and the
+    padding rows are the cheapest rows any shard could traverse.  Returns
+    ``(padded_list, n_real)``.
+    """
+    gas = list(gas)
+    if not gas:
+        raise ValueError("pad_corpora needs at least one corpus")
+    if multiple < 1:
+        raise ValueError("multiple must be >= 1")
+    n_real = len(gas)
+    if n_real % multiple:
+        pad = min(gas, key=lambda ga: ga.num_rules)
+        gas.extend([pad] * (multiple - n_real % multiple))
+    return gas, n_real
+
+
+def shard_batch(gas: Sequence[GrammarArrays], mesh: Optional[Mesh] = None,
+                bucket: bool = True) -> GrammarBatch:
+    """Pack ``gas`` and shard the pack row-wise across ``mesh``.
+
+    ``mesh=None`` auto-detects (:func:`corpus_mesh`); if that still yields
+    no mesh (single device) the result is a plain unsharded pack — the
+    transparent fallback the serving layer relies on.  N is padded to a
+    mesh multiple (:func:`pad_corpora`); ragged shard counts (N not
+    divisible by devices) and N < devices are both handled by that
+    padding.
+    """
+    if mesh is None:
+        mesh = corpus_mesh()
+    if mesh is None:
+        return GrammarBatch.build(gas, bucket=bucket)
+    padded, n_real = pad_corpora(gas, mesh_size(mesh))
+    gb = GrammarBatch.build(padded, bucket=bucket)
+    return gb.shard(mesh, n_real=n_real)
+
+
+def run_sharded(gas: Sequence[GrammarArrays], kind: str,
+                mesh: Optional[Mesh] = None, method: str = "frontier",
+                backend: str = "jnp", l: int = 3,
+                bucket: bool = True) -> List:
+    """One-call sharded analytics: pad, pack, shard, run, unpad.
+
+    Results align with ``gas`` and are bit-identical to
+    ``run_batched(GrammarBatch.build(gas), ...)`` on a single device.
+    For recurring traffic prefer building the pack once via
+    :func:`shard_batch` (or the serving layer's pack cache) — this
+    convenience re-packs per call.
+    """
+    gb = shard_batch(gas, mesh=mesh, bucket=bucket)
+    return run_batched(gb, kind, method=method, backend=backend, l=l)

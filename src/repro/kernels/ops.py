@@ -19,9 +19,10 @@ TPU lowers the Pallas kernel; CPU production traffic takes the jnp form of
 the same plan (interpret-mode emulation is pure overhead — interpret=True
 remains available as the validation oracle).
 
-The old ``ELL_VMEM_WEIGHT_LIMIT`` hard fallback is gone: both ELL kernels
-stream the weight vector through VMEM in chunks (grid-blocked), so weight
-size no longer routes anything.
+Weight-vector size routes nothing: both ELL kernels stream the weight
+vector through VMEM in grid-blocked chunks (propagate.py DESIGN note), so
+arbitrarily large rule counts run through the same kernels — dispatch
+decisions here are about occupancy and platform only.
 """
 
 from __future__ import annotations
@@ -79,14 +80,19 @@ def ell_use_ref(num_weights: int, rows: int) -> bool:
     return rows < ELL_MIN_ROWS
 
 
-def ell_batched_use_ref(num_edges: int, n: int, rows: int, k: int) -> bool:
+def ell_batched_use_ref(num_edges: int, n: int, rows: int, k: int,
+                        shards: int = 1) -> bool:
     """True when a batched propagation round should stay on segment_sum.
 
     Occupancy dispatch for the dense [N, rows, K] ELL plan: reject tiny
     batches (launch overhead), very wide plans (K beyond any realistic
     in-degree bucket), and plans so sparse that the K-padded gather does
-    >256x the real edge work."""
-    if n * rows < ELL_BATCH_MIN_ROWS:
+    >256x the real edge work.  ``shards`` > 1 evaluates the launch-overhead
+    gate per device — a corpus-sharded pack (core/batch.py DESIGN note)
+    launches one program per shard over N/shards rows, so that is the width
+    the launch must amortize.  Fill is a ratio and shard-invariant."""
+    shards = max(int(shards), 1)
+    if (n // shards) * rows < ELL_BATCH_MIN_ROWS:
         return True
     if k > ELL_BATCH_MAX_WIDTH:
         return True

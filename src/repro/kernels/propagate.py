@@ -10,11 +10,10 @@ contribute zero — the mask never enters the kernel.  The traversal engines
 run the fused per-rule variant (propagate_batched.py, where the row index
 IS the destination rule); this kernel remains the scalar row-sums surface.
 
-DESIGN — blocked weight streaming: the gather ``weight[src]`` used to run
-from a single VMEM-resident copy of the full weight vector, capping the
-grammar at ~3.5M rules (the old ``ELL_VMEM_WEIGHT_LIMIT`` hard fallback in
-ops.py).  The kernel is now tiled over a second grid dimension of
-weight *chunks*: grid step (i, j) gathers block i's rows from weight chunk
+DESIGN — blocked weight streaming: the kernel is tiled over a second grid
+dimension of weight *chunks*, so the gather ``weight[src]`` never needs a
+VMEM-resident copy of the full weight vector (which would cap the grammar
+at a few million rules): grid step (i, j) gathers block i's rows from weight chunk
 ``[j*wc, (j+1)*wc)`` only, masking out-of-chunk sources to zero, and
 accumulates into the same output block (revisiting grid dimension — the
 out BlockSpec depends only on i, with init at j == 0).  Every source index

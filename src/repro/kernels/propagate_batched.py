@@ -20,8 +20,8 @@ twice (the segment_sum path runs two scatters per round).
 Grid = (corpus, row-block, weight-chunk): the weight/active vectors stream
 through VMEM in ``wc``-length chunks exactly like propagate.py (out blocks
 depend only on (n, i); chunk j is the innermost revisiting dimension with
-init at j == 0), so rule counts beyond the old ``ELL_VMEM_WEIGHT_LIMIT``
-hold no cliff.  Gathers lower via Mosaic dynamic-gather; CPU validation
+init at j == 0), so the VMEM footprint is fixed and rule count holds no
+cliff.  Gathers lower via Mosaic dynamic-gather; CPU validation
 runs through ``interpret=True`` (ops.py routes CPU *production* traffic to
 the jnp form of the same plan — interpret-mode emulation is pure overhead).
 """

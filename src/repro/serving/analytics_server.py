@@ -31,6 +31,19 @@ the async queue (:mod:`repro.serving.queue`) execute the exact same code:
   per-signature EWMA on :class:`ServerStats` (the async flush policy reads
   those estimates to decide when a group's earliest deadline is "one batch
   away").
+
+Device-sharded execution: when more than one device is visible the server
+holds a 1-D corpus mesh (``mesh="auto"`` ->
+:func:`repro.distributed.shard_batch.corpus_mesh`) and
+:meth:`execute_chunk` selects a sharded pack by group size — chunks of at
+least ``shard_min_corpora`` corpora (default: the device count) split
+row-wise across the mesh and run as one program spanning all devices
+(:meth:`GrammarBatch.shard`).  Chunk capacity grows accordingly:
+:meth:`chunk_capacity` allows up to ``max_batch * devices`` corpora per
+sharded chunk, which the async queue exploits through its
+``target_shards`` knob.  On a single device everything transparently
+degrades to the original per-device path — results are bit-identical
+either way.
 """
 
 from __future__ import annotations
@@ -45,6 +58,8 @@ from repro.core import GrammarArrays, analytics as _analytics
 from repro.core.batch import (ANALYTICS_KINDS, GrammarBatch, run_batched,
                               _round_up_pow2)
 from repro.data.store import CompressedCorpus
+from repro.distributed.shard_batch import (corpus_mesh, mesh_size,
+                                           shard_batch)
 
 
 @dataclass(frozen=True)
@@ -79,6 +94,7 @@ class ServerStats:
     queries: int = 0
     groups: int = 0            # (kind, params) groups seen
     batched_calls: int = 0     # jitted batched executions
+    sharded_calls: int = 0     # of which: device-sharded packs
     single_calls: int = 0      # per-corpus executions (memoized weights)
     batch_cache_hits: int = 0  # GrammarBatch packs reused
     # distinct pad signatures -> batched-call count (bounded by the number
@@ -149,7 +165,9 @@ class AnalyticsServer:
     _SINGLE_METHOD = {"auto": "frontier"}
 
     def __init__(self, max_batch: int = 16, bucket: bool = True,
-                 method: str = "frontier", max_cached_batches: int = 32):
+                 method: str = "frontier", max_cached_batches: int = 32,
+                 mesh: object = "auto",
+                 shard_min_corpora: Optional[int] = None):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         self.max_batch = max_batch
@@ -161,9 +179,19 @@ class AnalyticsServer:
         if max_cached_batches < 1:
             raise ValueError("max_cached_batches must be >= 1")
         self.max_cached_batches = max_cached_batches
+        # device-sharded execution: "auto" -> 1-D mesh over the local
+        # devices (None when only one is visible — the transparent
+        # single-device fallback); None -> never shard; or a caller mesh.
+        self.mesh = corpus_mesh() if mesh == "auto" else mesh
+        if shard_min_corpora is not None and shard_min_corpora < 1:
+            raise ValueError("shard_min_corpora must be >= 1")
+        # default: shard once a chunk has at least one corpus per device
+        self.shard_min_corpora = (mesh_size(self.mesh)
+                                  if shard_min_corpora is None
+                                  else shard_min_corpora)
         self._corpora: Dict[str, GrammarArrays] = {}
         self._stores: Dict[str, CompressedCorpus] = {}
-        self._batches: Dict[Tuple[str, ...], GrammarBatch] = {}
+        self._batches: Dict[Tuple, GrammarBatch] = {}
         self.stats = ServerStats()
 
     # ---------------------------------------------------------- registry --
@@ -183,8 +211,9 @@ class AnalyticsServer:
         else:
             self._corpora[name] = corpus
         # packs that contained an older corpus under this name are stale
+        # (cache keys are (names_tuple, shards))
         self._batches = {k: v for k, v in self._batches.items()
-                         if name not in k}
+                         if name not in k[0]}
 
     def corpora(self) -> Tuple[str, ...]:
         return tuple(self._corpora)
@@ -237,21 +266,46 @@ class AnalyticsServer:
         return results
 
     # ------------------------------------------------------- engine core --
+    def shard_count(self, n_corpora: int) -> int:
+        """Devices a chunk of ``n_corpora`` would span: the mesh size once
+        the chunk reaches ``shard_min_corpora`` (or outgrows a
+        single-device pack), else 1."""
+        if self.mesh is None:
+            return 1
+        if n_corpora >= self.shard_min_corpora or n_corpora > self.max_batch:
+            return mesh_size(self.mesh)
+        return 1
+
+    def chunk_capacity(self, target_shards: int = 1) -> int:
+        """Corpora one :meth:`execute_chunk` call may carry.
+
+        ``max_batch`` stays the per-device pack bound; with a mesh and
+        ``target_shards`` > 1 a chunk may span that many devices, so the
+        capacity scales to ``max_batch * min(target_shards, devices)`` —
+        the async queue's ``target_shards`` knob feeds this so large
+        flushes split across devices instead of serializing
+        ``max_batch``-sized chunks."""
+        if target_shards < 1:
+            raise ValueError("target_shards must be >= 1")
+        return self.max_batch * min(target_shards, mesh_size(self.mesh))
+
     def run_group(self, kind: str, names: Sequence[str],
-                  l: Optional[int] = None) -> Dict:
+                  l: Optional[int] = None, target_shards: int = 1) -> Dict:
         """Execute one (kind, l) group over deduped corpus ``names``.
 
         Chunks corpora of similar grammar size together: padding in each
         pack is bounded by the size spread within the chunk.  Name is the
         tie-break so the chunking (and thus the pack-cache key) is canonical
         for a given corpus set regardless of query order.  Both the sync
-        :meth:`run` and the async queue flush land here.
+        :meth:`run` and the async queue flush land here;
+        ``target_shards`` > 1 widens each chunk to span that many devices
+        (:meth:`chunk_capacity`).
         """
+        cap = self.chunk_capacity(target_shards)
         order = sorted(names, key=lambda n: (self._corpora[n].num_rules, n))
         out: Dict = {}
-        for s in range(0, len(order), self.max_batch):
-            out.update(self.execute_chunk(kind, order[s: s + self.max_batch],
-                                          l=l))
+        for s in range(0, len(order), cap):
+            out.update(self.execute_chunk(kind, order[s: s + cap], l=l))
         return out
 
     def execute_chunk(self, kind: str, chunk: Sequence[str],
@@ -265,6 +319,10 @@ class AnalyticsServer:
         ``l`` must be the group-normalized parameter: the real window length
         for sequence_count, ``None`` for every other kind (enforced here so
         a stray ``Query.l`` can never split or mis-share a group).
+
+        Sharded mode (:meth:`shard_count` > 1): the pack splits row-wise
+        across the corpus mesh and one program spans all devices — results
+        remain bit-identical to the single-device pack.
         """
         if kind == "sequence_count":
             if l is None:
@@ -273,11 +331,12 @@ class AnalyticsServer:
             raise ValueError(
                 f"l={l!r} is meaningless for kind {kind!r}; group keys "
                 f"normalize it to None (Query.effective_l)")
-        if len(chunk) > self.max_batch:
+        shards = self.shard_count(len(chunk))
+        if len(chunk) > self.max_batch * max(shards, 1):
             raise ValueError(f"chunk of {len(chunk)} exceeds "
-                             f"max_batch={self.max_batch}")
+                             f"max_batch={self.max_batch} x {shards} shards")
         t0 = time.perf_counter()
-        if len(chunk) == 1:
+        if len(chunk) == 1 and shards == 1:
             name = chunk[0]
             if name in self._stores:
                 # CompressedCorpus: the per-corpus path reuses the traversal
@@ -296,10 +355,12 @@ class AnalyticsServer:
                 out = {name: vals[0]}
             self.stats.single_calls += 1
         else:
-            gb = self._get_batch(list(chunk))
+            gb = self._get_batch(list(chunk), shards=shards)
             vals = run_batched(gb, kind, method=self.method,
                                l=3 if l is None else l)
             self.stats.batched_calls += 1
+            if shards > 1:
+                self.stats.sharded_calls += 1
             self.stats.signatures[gb.signature] = \
                 self.stats.signatures.get(gb.signature, 0) + 1
             sig = gb.signature
@@ -308,14 +369,20 @@ class AnalyticsServer:
         return out
 
     # ---------------------------------------------------------- internals --
-    def _get_batch(self, names: Sequence[str]) -> GrammarBatch:
-        key = tuple(names)
+    def _get_batch(self, names: Sequence[str],
+                   shards: int = 1) -> GrammarBatch:
+        key = (tuple(names), shards)
         gb = self._batches.get(key)
         if gb is not None:
             self.stats.batch_cache_hits += 1
             return gb
-        gb = GrammarBatch.build([self._corpora[n] for n in names],
-                                bucket=self.bucket)
+        gas = [self._corpora[n] for n in names]
+        if shards > 1:
+            # shards > 1 implies shards == mesh_size(self.mesh): the pad +
+            # build + shard recipe is the library's, in one place
+            gb = shard_batch(gas, self.mesh, bucket=self.bucket)
+        else:
+            gb = GrammarBatch.build(gas, bucket=self.bucket)
         while len(self._batches) >= self.max_cached_batches:
             self._batches.pop(next(iter(self._batches)))   # FIFO eviction
         self._batches[key] = gb

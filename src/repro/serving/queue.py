@@ -10,8 +10,10 @@ deadline=...) -> Future`` and holds queries in a pending queue, grouped by
 compiled program).  A group is flushed — one call into the shared engine
 core (:meth:`AnalyticsServer.run_group`) — when any of:
 
-``max_batch``  the group reaches ``max_batch`` distinct corpora: a full
-               pack, nothing to wait for (checked on every submit);
+``max_batch``  the group reaches one flush's worth of distinct corpora —
+               ``max_batch`` on one device, ``max_batch * target_shards``
+               when a corpus mesh is available (a full pack, nothing to
+               wait for; checked on every submit);
 ``deadline``   the earliest deadline in the group is within one estimated
                batch latency (the per-signature EWMA tracked by
                ``ServerStats.observe_latency``) of *now* — waiting longer
@@ -27,6 +29,14 @@ core (:meth:`AnalyticsServer.run_group`) — when any of:
 Because flushes call the same ``run_group`` / ``execute_chunk`` core as the
 sync path, results are bit-identical to a one-shot ``AnalyticsServer.run``
 of the same queries (tests/test_queue.py fuzzes exactly that).
+
+Device-sharded flushes: ``target_shards`` > 1 asks the engine to split
+large flushes row-wise across the corpus mesh instead of serializing
+``max_batch``-sized chunks — one flush of up to ``max_batch *
+target_shards`` corpora executes as one program spanning that many devices
+(``AnalyticsServer.chunk_capacity`` / ``GrammarBatch.shard``).  The knob
+is a *target*: with fewer devices (or one), capacity degrades gracefully
+to the plain per-device flush, and results stay bit-identical throughout.
 
 Time is injectable (``clock=``): the flush-policy tests drive a simulated
 clock through :meth:`poll`, deterministically.  For real deployments,
@@ -111,6 +121,14 @@ class AsyncAnalyticsServer:
     poll_interval: sleep granularity of the background thread
                    (:meth:`start`); also the staleness bound on the
                    ``deadline``/``idle`` conditions when threaded.
+    target_shards: how many devices one flush should aim to span.  Raises
+                   the ``max_batch`` fill condition to the engine's
+                   ``chunk_capacity(target_shards)`` and forwards the
+                   target to ``run_group`` so a large flush executes as
+                   one device-sharded program instead of sequential
+                   ``max_batch`` chunks.  Clamped by the devices actually
+                   in the engine's mesh; 1 (default) preserves the
+                   original single-device flush policy exactly.
     """
 
     def __init__(self, server: AnalyticsServer, *,
@@ -118,12 +136,16 @@ class AsyncAnalyticsServer:
                  max_wait: Optional[float] = None,
                  default_latency: float = DEFAULT_LATENCY_ESTIMATE,
                  clock: Callable[[], float] = time.monotonic,
-                 poll_interval: float = 0.001):
+                 poll_interval: float = 0.001,
+                 target_shards: int = 1):
         if idle_timeout < 0:
             raise ValueError("idle_timeout must be >= 0")
         if poll_interval <= 0:
             raise ValueError("poll_interval must be > 0")
+        if target_shards < 1:
+            raise ValueError("target_shards must be >= 1")
         self._engine = server
+        self.target_shards = target_shards
         self.idle_timeout = float(idle_timeout)
         self.max_wait = (10.0 * self.idle_timeout if max_wait is None
                          else float(max_wait))
@@ -179,7 +201,8 @@ class AsyncAnalyticsServer:
             self._depth += 1
             self.stats.max_queue_depth = max(self.stats.max_queue_depth,
                                              self._depth)
-            if len(g.corpora_seen) >= self._engine.max_batch:
+            if len(g.corpora_seen) >= self._engine.chunk_capacity(
+                    self.target_shards):
                 to_flush = self._pop(key)
         if to_flush is not None:
             self._flush_group(to_flush, "max_batch", self._now())
@@ -260,7 +283,9 @@ class AsyncAnalyticsServer:
         if live:
             try:
                 with self._exec_lock:
-                    by_corpus = self._engine.run_group(g.kind, names, l=g.l)
+                    by_corpus = self._engine.run_group(
+                        g.kind, names, l=g.l,
+                        target_shards=self.target_shards)
             except Exception as e:              # noqa: BLE001 — fanned out
                 for p in live:
                     p.future.set_exception(e)

@@ -111,6 +111,13 @@ def oracle_sequence_count(ga: GrammarArrays, l: int = 3,
     return grams.astype(np.int32), counts.astype(np.float32)
 
 
+def oracle_batch(gas: List[GrammarArrays], kind: str, l: int = 3) -> List:
+    """Per-corpus oracle results for a corpus list — the reference shape of
+    ``run_batched`` / ``run_sharded`` output (the sharded differential
+    suites compare whole batches against this)."""
+    return [oracle(ga, kind, l=l) for ga in gas]
+
+
 def oracle(ga: GrammarArrays, kind: str, l: int = 3,
            stream: np.ndarray | None = None):
     """Recompute one analytics kind from the decompressed stream, shaped

@@ -234,13 +234,18 @@ def test_group_key_normalizes_l():
 
 
 def test_execute_chunk_enforces_l_normalization(server):
-    srv, _ = server
+    srv, gas = server
     with pytest.raises(ValueError):
         srv.execute_chunk("word_count", ["c0"], l=5)     # stray l
     with pytest.raises(ValueError):
         srv.execute_chunk("sequence_count", ["c0"])      # missing l
+    # over-capacity chunk: pinned on an unsharded server — with a corpus
+    # mesh the capacity legitimately grows to max_batch * devices
+    srv1 = AnalyticsServer(max_batch=4, mesh=None)
+    for name, ga in gas.items():
+        srv1.register(name, ga)
     with pytest.raises(ValueError):
-        srv.execute_chunk("word_count", [f"c{i}" for i in range(5)])
+        srv1.execute_chunk("word_count", [f"c{i}" for i in range(5)])
 
 
 def test_pack_cache_is_bounded_and_order_canonical():

@@ -9,7 +9,11 @@ execution paths:
 
 * single-corpus (``core.analytics``, frontier + leveled traversals);
 * batched segment_sum (``run_batched`` method ``frontier`` / ``leveled``);
-* batched ELL (``frontier_ell`` / ``leveled_ell`` — the dense edge plan).
+* batched ELL (``frontier_ell`` / ``leveled_ell`` — the dense edge plan);
+* device-sharded batched (``distributed.shard_batch.run_sharded``) when
+  more than one device is visible — CI's multidevice lane forces 8 CPU
+  host devices; tests/_shard_worker.py covers it on single-device hosts
+  via a subprocess.
 
 Runs without hypothesis via tests/_hypothesis_compat (fixed seeded
 examples); the ``slow``-marked test rescales the same check to larger
@@ -21,12 +25,15 @@ import os
 import numpy as np
 import pytest
 
+import jax
+
 from repro.core import (ANALYTICS_KINDS, Grammar, GrammarBatch,
                         compress_files, expand_range, flatten,
                         inverted_index, ranked_inverted_index, run_batched,
                         sequence_count, sort_words, term_vector, word_count)
+from repro.distributed.shard_batch import corpus_mesh, run_sharded
 from _hypothesis_compat import given, settings, st
-from _oracle import assert_result_equal, full_stream, oracle
+from _oracle import assert_result_equal, full_stream, oracle, oracle_batch
 from conftest import make_repetitive_files
 
 BATCHED_METHODS = ("frontier", "leveled", "frontier_ell", "leveled_ell")
@@ -106,6 +113,28 @@ def test_batched_paths_match_oracle(seed):
                 assert_result_equal(
                     g_i, w_i, kind,
                     f"(batched {method}, corpus {i}, seed={seed})")
+
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs a multi-device mesh (CI multidevice lane "
+                           "forces 8 CPU host devices)")
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 100_000))
+def test_sharded_paths_match_oracle(seed):
+    """All six analytics through the device-sharded pack — ragged N=5 so
+    shard padding (N < devices or N % devices != 0) is always exercised —
+    bit-equal to the decompress-then-scan oracle."""
+    rng = np.random.default_rng(seed)
+    gas = [_random_grammar(rng)[0] for _ in range(5)]
+    mesh = corpus_mesh()
+    for kind in ANALYTICS_KINDS:
+        wants = oracle_batch(gas, kind)
+        for method in ("frontier", "leveled_ell"):
+            got = run_sharded(gas, kind, mesh=mesh, method=method, l=3)
+            for i, (g_i, w_i) in enumerate(zip(got, wants)):
+                assert_result_equal(
+                    g_i, w_i, kind,
+                    f"(sharded {method}, corpus {i}, seed={seed})")
 
 
 @settings(max_examples=4, deadline=None)
