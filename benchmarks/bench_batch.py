@@ -11,6 +11,12 @@ Also emits ``batch/traversal/{segment_sum,ell,ell_speedup}``: the batched
 frontier rounds on the COO segment_sum path vs the dense ELL edge plan
 (scatter-free gather form — core/batch.py DESIGN note).
 
+``search/<scheme>/{sequential,batched,speedup}`` rows time compressed
+BM25/TF-IDF top-k ranking (repro/search): one jitted per-corpus scoring
+call per corpus (prebuilt SearchIndex each) vs ONE batched program over
+the whole pack — the retrieval analogue of the batched-vs-sequential
+analytics story (index builds excluded; both sides warmed).
+
 ``shard/*`` rows time the device-sharded pack (distributed/shard_batch.py)
 against the single-device pack on the same corpora: ``shard/<app>/single``
 vs ``shard/<app>/sharded`` plus a ``speedup`` row, and the ``devices``
@@ -34,6 +40,8 @@ from repro.core import (GrammarArrays, GrammarBatch, batched_term_vector,
                         batched_top_down_weights, batched_word_count,
                         compress_files, flatten, term_vector, word_count)
 from repro.distributed.shard_batch import corpus_mesh, mesh_size, shard_batch
+from repro.search import (batched_search, build_search_index,
+                          search_index_topk)
 
 from .common import emit, timeit
 
@@ -109,6 +117,34 @@ def run(smoke: bool = False) -> dict:
     out["ell_vs_segment_sum"] = {
         "segment_sum_us": t_seg * 1e6, "ell_us": t_ell * 1e6,
         "speedup": ell_speedup}
+
+    # ----- compressed search: batched vs per-corpus sequential ranking ---
+    # sequential = the pre-batching retrieval story: one jitted scoring
+    # call per corpus against its (prebuilt, memoized) SearchIndex;
+    # batched = one program ranking every corpus in the pack (pack-level
+    # statistics memoized, like recurring serving traffic).  Index builds
+    # are excluded from both sides — this times the ranking hot path.
+    terms = tuple(int(t) for t in
+                  np.random.default_rng(11).integers(0, 40, 8))
+    indexes = [build_search_index(ga) for ga in gas]
+    out["search"] = {"n": n, "terms": len(terms), "schemes": {}}
+    for scheme in ("bm25", "tfidf"):
+        def seq_search(scheme=scheme):
+            for si in indexes:
+                search_index_topk(si, terms, k=10, scheme=scheme)
+
+        def bat_search(scheme=scheme):
+            batched_search(gb, terms, k=10, scheme=scheme)
+
+        t_seq = timeit(seq_search, repeat=3, warmup=1)
+        t_bat = timeit(bat_search, repeat=3, warmup=1)
+        s_speedup = t_seq / max(t_bat, 1e-12)
+        emit(f"search/{scheme}/sequential", t_seq, f"n={n}")
+        emit(f"search/{scheme}/batched", t_bat, f"n={n}")
+        emit(f"search/{scheme}/speedup", 0.0, f"{s_speedup:.2f}x")
+        out["search"]["schemes"][scheme] = {
+            "sequential_us": t_seq * 1e6, "batched_us": t_bat * 1e6,
+            "speedup": s_speedup}
 
     # ----- device-sharded pack vs single-device pack (same corpora) -----
     mesh = corpus_mesh()

@@ -72,7 +72,7 @@ import dataclasses
 import functools
 from dataclasses import dataclass
 from dataclasses import field as dataclass_field
-from typing import Any, List, Optional, Sequence, Tuple
+from typing import Any, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -393,7 +393,8 @@ class GrammarBatch:
 # Batched traversals                                                       #
 # ----------------------------------------------------------------------- #
 @functools.lru_cache(maxsize=None)
-def _sharded_program(fn, mesh, in_ndims: Tuple[int, ...], out_ndim: int,
+def _sharded_program(fn, mesh, in_ndims: Tuple[int, ...],
+                     out_ndim: Union[int, Tuple[int, ...]],
                      static: Tuple[Tuple[str, Any], ...] = ()):
     """``jit(shard_map(fn))`` splitting every array's leading corpus axis.
 
@@ -404,16 +405,20 @@ def _sharded_program(fn, mesh, in_ndims: Tuple[int, ...], out_ndim: int,
     Memoized per (fn, mesh, shapes, statics) so recurring sharded calls
     reach jit's compile cache instead of rebuilding a fresh (cache-missing)
     wrapper each time; ``static`` binds hashable keyword args (level
-    schedules, padded dims) before wrapping.
+    schedules, padded dims) before wrapping.  ``out_ndim`` may be a tuple
+    of ranks for functions returning several row-sharded arrays (the
+    search scorer returns top-k values + indices).
     """
     bound = functools.partial(fn, **dict(static)) if static else fn
 
     def spec(nd: int) -> P:
         return P(CORPUS_AXIS, *([None] * (nd - 1)))
 
+    out_specs = (tuple(spec(nd) for nd in out_ndim)
+                 if isinstance(out_ndim, tuple) else spec(out_ndim))
     sm = shard_map(bound, mesh=mesh,
                    in_specs=tuple(spec(nd) for nd in in_ndims),
-                   out_specs=spec(out_ndim), check_rep=False)
+                   out_specs=out_specs, check_rep=False)
     return jax.jit(sm)
 
 

@@ -103,6 +103,18 @@ class CompressedCorpus:
                                                          method=method)
         return self._weights_cache[key]
 
+    def search_index(self, method: str = "frontier"):
+        """Per-corpus retrieval index (tf / doc lengths / doc frequencies /
+        BM25 normalizer), memoized like the traversal weights — it shares
+        the memoized per-file traversal with the per-file analytics.  Lazy
+        import: the search package sits above the store in the layering."""
+        from repro.search.index import base_method, build_search_index
+        key = ("search_index", base_method(method))
+        if key not in self._weights_cache:
+            self._weights_cache[key] = build_search_index(self,
+                                                          method=method)
+        return self._weights_cache[key]
+
     def cached_weight_keys(self):
         return tuple(sorted(self._weights_cache))
 

@@ -30,6 +30,9 @@ How it works
 * :func:`run_sharded` is the one-call convenience: corpora in, per-corpus
   results out, bit-identical to ``run_batched`` on one device (asserted
   against the decompress-then-scan oracle in tests/_shard_worker.py).
+  The retrieval kinds (``search_bm25`` / ``search_tfidf``) run through the
+  same path: per-shard scoring + top-k, host merge, bit-identical
+  rankings (repro/search/engine.py).
 
 Why bit-identical is cheap to promise: corpus rows never interact in any
 of the six analytics, each shard executes the very program a single device
@@ -132,14 +135,24 @@ def shard_batch(gas: Sequence[GrammarArrays], mesh: Optional[Mesh] = None,
 def run_sharded(gas: Sequence[GrammarArrays], kind: str,
                 mesh: Optional[Mesh] = None, method: str = "frontier",
                 backend: str = "jnp", l: int = 3,
-                bucket: bool = True) -> List:
+                bucket: bool = True, terms=None, k: int = 10) -> List:
     """One-call sharded analytics: pad, pack, shard, run, unpad.
 
     Results align with ``gas`` and are bit-identical to
     ``run_batched(GrammarBatch.build(gas), ...)`` on a single device.
-    For recurring traffic prefer building the pack once via
+    Besides the six analytics this also serves the retrieval kinds
+    (``search_bm25`` / ``search_tfidf``, parameterized by ``terms``/``k``)
+    through :func:`repro.search.engine.batched_search` — each shard ranks
+    its own corpus rows and the top-k merge happens on host.  For
+    recurring traffic prefer building the pack once via
     :func:`shard_batch` (or the serving layer's pack cache) — this
     convenience re-packs per call.
     """
     gb = shard_batch(gas, mesh=mesh, bucket=bucket)
+    if kind in ("search_bm25", "search_tfidf"):
+        # lazy import: repro.search sits above this module in the layering
+        from repro.search.engine import batched_search
+        from repro.search.scoring import KIND_SCHEME
+        return batched_search(gb, terms, k=k, scheme=KIND_SCHEME[kind],
+                              method=method)
     return run_batched(gb, kind, method=method, backend=backend, l=l)

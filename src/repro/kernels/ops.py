@@ -180,6 +180,29 @@ def weighted_bincount_batched(ids: jnp.ndarray, vals: jnp.ndarray,
          for s in range(0, n, rows)], axis=0)
 
 
+def masked_top_k(scores: jnp.ndarray, valid: jnp.ndarray, k: int):
+    """Top-k over the trailing axis with invalid slots masked out.
+
+    The search subsystem's ranking primitive: ``scores [..., M]`` and a
+    ``valid`` mask of the same shape; masked slots become ``-inf`` so any
+    finite real score outranks them.  Returns ``(values, indices)`` of the
+    ``k`` largest per row, values descending; ``jax.lax.top_k`` resolves
+    equal values toward the LOWER index, which is exactly the
+    deterministic file-id tie-break the retrieval layer promises (and the
+    numpy oracle's stable argsort reproduces).  ``k`` is static and must
+    not exceed the trailing dimension.
+    """
+    k = int(k)
+    if k < 1:
+        raise ValueError(f"masked_top_k needs k >= 1, got {k}")
+    if k > scores.shape[-1]:
+        raise ValueError(f"k={k} exceeds the candidate axis "
+                         f"({scores.shape[-1]})")
+    masked = jnp.where(valid, scores, -jnp.inf)
+    vals, idx = jax.lax.top_k(masked, k)
+    return vals, idx                # a real tuple (shard_map out_specs)
+
+
 def ell_row_sums(weights: jnp.ndarray, src: jnp.ndarray, freq: jnp.ndarray,
                  interpret: bool | None = None) -> jnp.ndarray:
     """ELL gather row sums: the frontier-propagation hot loop."""

@@ -3,9 +3,10 @@ query-dispatch layer for the batched multi-corpus analytics engine and its
 async deadline-aware submission queue."""
 
 from .decode import make_serve_step, make_prefill_step, greedy_generate
-from .analytics_server import AnalyticsServer, Query, ServerStats
-from .queue import AsyncAnalyticsServer, FlushEvent
+from .analytics_server import AnalyticsServer, Query, ServerStats, \
+    SERVED_KINDS
+from .queue import AsyncAnalyticsServer, FlushEvent, QueueFull
 
 __all__ = ["make_serve_step", "make_prefill_step", "greedy_generate",
-           "AnalyticsServer", "Query", "ServerStats",
-           "AsyncAnalyticsServer", "FlushEvent"]
+           "AnalyticsServer", "Query", "ServerStats", "SERVED_KINDS",
+           "AsyncAnalyticsServer", "FlushEvent", "QueueFull"]

@@ -60,14 +60,29 @@ from repro.core.batch import (ANALYTICS_KINDS, GrammarBatch, run_batched,
 from repro.data.store import CompressedCorpus
 from repro.distributed.shard_batch import (corpus_mesh, mesh_size,
                                            shard_batch)
+from repro.search.engine import batched_search, search_corpus
+from repro.search.scoring import (DEFAULT_TOP_K, KIND_SCHEME, SEARCH_KINDS,
+                                  normalize_terms)
+
+#: Everything the server accepts: the six analytics + ranked retrieval.
+SERVED_KINDS = ANALYTICS_KINDS + SEARCH_KINDS
 
 
 @dataclass(frozen=True)
 class Query:
-    """One analytics request against a registered corpus."""
+    """One analytics / search request against a registered corpus."""
     corpus: str
-    kind: str                  # one of ANALYTICS_KINDS
+    kind: str                  # one of SERVED_KINDS
     l: int = 3                 # sequence_count only
+    terms: Optional[Tuple[int, ...]] = None   # search kinds only
+    k: Optional[int] = None                   # search kinds only (top-k)
+
+    def __post_init__(self):
+        # keep the frozen dataclass hashable / group-keyable when callers
+        # pass a list of term ids
+        if self.terms is not None and not isinstance(self.terms, tuple):
+            object.__setattr__(self, "terms",
+                               tuple(int(t) for t in self.terms))
 
     def effective_l(self) -> Optional[int]:
         """``l`` is a sequence_count parameter ONLY: for every other kind it
@@ -77,8 +92,25 @@ class Query:
         ``l``)."""
         return self.l if self.kind == "sequence_count" else None
 
+    def effective_terms(self) -> Optional[Tuple[int, ...]]:
+        """Query terms are search parameters ONLY — normalized to ``None``
+        off the search kinds (same contract as :meth:`effective_l`: a
+        stray ``terms`` on word_count can neither split nor mis-share a
+        group).  Search kinds always carry their real terms, so two
+        distinct searches can never share a batched chunk."""
+        return self.terms if self.kind in SEARCH_KINDS else None
+
+    def effective_k(self) -> Optional[int]:
+        """Top-k is a search parameter ONLY; search queries that omit it
+        get :data:`repro.search.DEFAULT_TOP_K` so explicit-default and
+        omitted-k queries share one group."""
+        if self.kind not in SEARCH_KINDS:
+            return None
+        return DEFAULT_TOP_K if self.k is None else int(self.k)
+
     def group_key(self) -> Tuple:
-        return (self.kind, self.effective_l())
+        return (self.kind, self.effective_l(), self.effective_terms(),
+                self.effective_k())
 
 
 #: Flush/latency signature of the single-corpus execution path (no pack).
@@ -105,6 +137,7 @@ class ServerStats:
     submitted: int = 0                 # queries entered through submit()
     flushes: Dict[str, int] = field(default_factory=dict)  # reason -> count
     max_queue_depth: int = 0           # high-water pending-query count
+    rejected: int = 0                  # submits refused by max_pending
 
     # ----- latency estimator -----
     # EWMA of observed chunk latencies keyed by (kind, chunk signature);
@@ -219,8 +252,13 @@ class AnalyticsServer:
         return tuple(self._corpora)
 
     def validate(self, q: Query) -> None:
-        if q.kind not in ANALYTICS_KINDS:
-            raise ValueError(f"unknown analytics kind {q.kind!r}")
+        if q.kind not in SERVED_KINDS:
+            raise ValueError(f"unknown analytics kind {q.kind!r}; "
+                             f"expected one of {SERVED_KINDS}")
+        if q.kind in SEARCH_KINDS:
+            normalize_terms(q.terms)         # raises on None/empty/negative
+            if q.k is not None and q.k < 1:
+                raise ValueError(f"search top-k must be >= 1, got {q.k}")
         if q.corpus not in self._corpora:
             raise KeyError(f"corpus {q.corpus!r} not registered")
 
@@ -233,19 +271,20 @@ class AnalyticsServer:
 
     # ----------------------------------------------------------- serving --
     def plan_groups(self, queries: Sequence[Query]
-                    ) -> List[Tuple[str, Optional[int], List[int]]]:
+                    ) -> List[Tuple[Tuple, List[int]]]:
         """Validate ``queries`` and group them by :meth:`Query.group_key`.
 
-        Returns ``[(kind, l, idxs)]`` in first-seen order; ``l`` is the
-        normalized group parameter (None for every kind but sequence_count —
-        see :meth:`Query.effective_l`).
+        Returns ``[(group_key, idxs)]`` in first-seen order; the key is the
+        normalized ``(kind, l, terms, k)`` tuple — ``l`` is None for every
+        kind but sequence_count, ``terms``/``k`` are None off the search
+        kinds (see the ``effective_*`` normalizers on :class:`Query`).
         """
         for q in queries:
             self.validate(q)
         groups: Dict[Tuple, List[int]] = {}
         for i, q in enumerate(queries):
             groups.setdefault(q.group_key(), []).append(i)
-        return [(kind, l, idxs) for (kind, l), idxs in groups.items()]
+        return list(groups.items())
 
     def run(self, queries: Sequence[Query]) -> List:
         """Execute all queries; results align with the input order and are
@@ -254,13 +293,13 @@ class AnalyticsServer:
         self.stats.queries += len(queries)
 
         results: List = [None] * len(queries)
-        for kind, l, idxs in plans:
+        for (kind, l, terms, k), idxs in plans:
             self.stats.groups += 1
             names: List[str] = []
             for i in idxs:
                 if queries[i].corpus not in names:
                     names.append(queries[i].corpus)
-            by_corpus = self.run_group(kind, names, l=l)
+            by_corpus = self.run_group(kind, names, l=l, terms=terms, k=k)
             for i in idxs:
                 results[i] = by_corpus[queries[i].corpus]
         return results
@@ -290,8 +329,10 @@ class AnalyticsServer:
         return self.max_batch * min(target_shards, mesh_size(self.mesh))
 
     def run_group(self, kind: str, names: Sequence[str],
-                  l: Optional[int] = None, target_shards: int = 1) -> Dict:
-        """Execute one (kind, l) group over deduped corpus ``names``.
+                  l: Optional[int] = None,
+                  terms: Optional[Tuple[int, ...]] = None,
+                  k: Optional[int] = None, target_shards: int = 1) -> Dict:
+        """Execute one (kind, l, terms, k) group over deduped ``names``.
 
         Chunks corpora of similar grammar size together: padding in each
         pack is bounded by the size spread within the chunk.  Name is the
@@ -305,25 +346,17 @@ class AnalyticsServer:
         order = sorted(names, key=lambda n: (self._corpora[n].num_rules, n))
         out: Dict = {}
         for s in range(0, len(order), cap):
-            out.update(self.execute_chunk(kind, order[s: s + cap], l=l))
+            out.update(self.execute_chunk(kind, order[s: s + cap], l=l,
+                                          terms=terms, k=k))
         return out
 
-    def execute_chunk(self, kind: str, chunk: Sequence[str],
-                      l: Optional[int] = None) -> Dict:
-        """ONE execution: a jitted batched call for a multi-corpus chunk, or
-        the per-corpus path (memoized weights) when the chunk degenerates to
-        one corpus.  Records the observed wall latency into the
-        per-signature EWMA (``stats.latency_ewma``) that the async flush
-        policy uses as its batch-latency estimate.
-
-        ``l`` must be the group-normalized parameter: the real window length
-        for sequence_count, ``None`` for every other kind (enforced here so
-        a stray ``Query.l`` can never split or mis-share a group).
-
-        Sharded mode (:meth:`shard_count` > 1): the pack splits row-wise
-        across the corpus mesh and one program spans all devices — results
-        remain bit-identical to the single-device pack.
-        """
+    def _check_chunk_params(self, kind: str, l: Optional[int],
+                            terms: Optional[Tuple[int, ...]],
+                            k: Optional[int]) -> None:
+        """Group parameters must arrive normalized (``Query.effective_*``):
+        required for the kinds that consume them, ``None`` everywhere else —
+        a stray parameter can therefore never split or mis-share a group,
+        and a missing one fails loudly instead of silently defaulting."""
         if kind == "sequence_count":
             if l is None:
                 raise ValueError("sequence_count chunk needs an explicit l")
@@ -331,6 +364,50 @@ class AnalyticsServer:
             raise ValueError(
                 f"l={l!r} is meaningless for kind {kind!r}; group keys "
                 f"normalize it to None (Query.effective_l)")
+        if kind in SEARCH_KINDS:
+            normalize_terms(terms)
+            if k is None or k < 1:
+                raise ValueError(f"search chunk needs an explicit k >= 1, "
+                                 f"got {k!r}")
+        elif terms is not None or k is not None:
+            raise ValueError(
+                f"terms={terms!r}/k={k!r} are meaningless for kind "
+                f"{kind!r}; group keys normalize them to None "
+                f"(Query.effective_terms/effective_k)")
+
+    def _execute_batched(self, gb: GrammarBatch, kind: str,
+                         l: Optional[int], terms: Optional[Tuple[int, ...]],
+                         k: Optional[int]) -> List:
+        """One batched program over a pack: the six analytics via
+        ``run_batched``, the search kinds via the retrieval engine (which
+        memoizes its tf/df/dl statistics on the same pack)."""
+        if kind in SEARCH_KINDS:
+            return batched_search(gb, terms, k=k, scheme=KIND_SCHEME[kind],
+                                  method=self.method)
+        return run_batched(gb, kind, method=self.method,
+                           l=3 if l is None else l)
+
+    def execute_chunk(self, kind: str, chunk: Sequence[str],
+                      l: Optional[int] = None,
+                      terms: Optional[Tuple[int, ...]] = None,
+                      k: Optional[int] = None) -> Dict:
+        """ONE execution: a jitted batched call for a multi-corpus chunk, or
+        the per-corpus path (memoized weights) when the chunk degenerates to
+        one corpus.  Records the observed wall latency into the
+        per-signature EWMA (``stats.latency_ewma``) that the async flush
+        policy uses as its batch-latency estimate.
+
+        ``l``/``terms``/``k`` must be the group-normalized parameters: real
+        values for the kinds that consume them (sequence_count's window
+        length; the search kinds' query terms and top-k), ``None`` for every
+        other kind (enforced in :meth:`_check_chunk_params` so a stray
+        ``Query`` field can never split or mis-share a group).
+
+        Sharded mode (:meth:`shard_count` > 1): the pack splits row-wise
+        across the corpus mesh and one program spans all devices — results
+        remain bit-identical to the single-device pack.
+        """
+        self._check_chunk_params(kind, l, terms, k)
         shards = self.shard_count(len(chunk))
         if len(chunk) > self.max_batch * max(shards, 1):
             raise ValueError(f"chunk of {len(chunk)} exceeds "
@@ -340,24 +417,23 @@ class AnalyticsServer:
             name = chunk[0]
             if name in self._stores:
                 # CompressedCorpus: the per-corpus path reuses the traversal
-                # weights memoized on the store
-                out = {name: self._run_single(kind, name, l=l)}
+                # weights (and search index) memoized on the store
+                out = {name: self._run_single(kind, name, l=l, terms=terms,
+                                              k=k)}
                 sig = SINGLE_SIGNATURE
             else:
                 # bare GrammarArrays: a cached size-1 pack keeps compiled
-                # programs and (sequence_count) host plans across calls —
-                # repeat single-corpus traffic costs one dispatch, not one
-                # re-plan + re-compile
+                # programs and host plans (sequence_count windows, search
+                # statistics) across calls — repeat single-corpus traffic
+                # costs one dispatch, not one re-plan + re-compile
                 gb = self._get_batch([name])
-                vals = run_batched(gb, kind, method=self.method,
-                                   l=3 if l is None else l)
+                vals = self._execute_batched(gb, kind, l, terms, k)
                 sig = gb.signature
                 out = {name: vals[0]}
             self.stats.single_calls += 1
         else:
             gb = self._get_batch(list(chunk), shards=shards)
-            vals = run_batched(gb, kind, method=self.method,
-                               l=3 if l is None else l)
+            vals = self._execute_batched(gb, kind, l, terms, k)
             self.stats.batched_calls += 1
             if shards > 1:
                 self.stats.sharded_calls += 1
@@ -388,11 +464,19 @@ class AnalyticsServer:
         self._batches[key] = gb
         return gb
 
-    def _run_single(self, kind: str, name: str, l: Optional[int] = None):
+    def _run_single(self, kind: str, name: str, l: Optional[int] = None,
+                    terms: Optional[Tuple[int, ...]] = None,
+                    k: Optional[int] = None):
         """Per-corpus path: reuses weights memoized on the corpus store."""
         ga = self._corpora[name]
         store = self._stores.get(name)
         m = self._SINGLE_METHOD.get(self.method, self.method)
+        if kind in SEARCH_KINDS:
+            # search_corpus reuses the SearchIndex memoized on the store
+            # (and, through it, the memoized per-file traversal weights)
+            return search_corpus(store if store is not None else ga,
+                                 terms, k=k, scheme=KIND_SCHEME[kind],
+                                 method=m)
         # only run (and memoize) the traversal the query actually needs
         w = wf = None
         if store is not None:

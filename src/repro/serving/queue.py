@@ -26,6 +26,19 @@ core (:meth:`AnalyticsServer.run_group`) — when any of:
                by submission age too;
 ``drain``      an explicit :meth:`drain` / :meth:`close`.
 
+Search queries (kinds ``search_bm25`` / ``search_tfidf``) ride the same
+machinery: their normalized query terms and top-k are part of
+:meth:`Query.group_key`, so two distinct searches can never share a
+batched chunk, while identical searches against many corpora batch (and
+shard) exactly like the six analytics.
+
+Backpressure: ``max_pending`` bounds the queue depth.  A submit that
+would exceed it raises :class:`QueueFull` (and counts
+``stats.rejected``), or — with ``block=True`` — waits until a flush frees
+space (requires something else to drive flushes: the background thread,
+or another thread calling :meth:`poll`/:meth:`drain`).  The depth
+high-water mark is ``ServerStats.max_queue_depth``.
+
 Because flushes call the same ``run_group`` / ``execute_chunk`` core as the
 sync path, results are bit-identical to a one-shot ``AnalyticsServer.run``
 of the same queries (tests/test_queue.py fuzzes exactly that).
@@ -58,6 +71,10 @@ from .analytics_server import (DEFAULT_LATENCY_ESTIMATE, AnalyticsServer,
                                Query)
 
 
+class QueueFull(RuntimeError):
+    """submit() would push the pending-query depth past ``max_pending``."""
+
+
 @dataclass
 class _Pending:
     query: Query
@@ -70,6 +87,8 @@ class _Pending:
 class _Group:
     kind: str
     l: Optional[int]                # normalized (None unless sequence_count)
+    terms: Optional[Tuple[int, ...]] = None  # normalized (search kinds only)
+    k: Optional[int] = None                  # normalized (search kinds only)
     items: List[_Pending] = field(default_factory=list)
     last_arrival: float = 0.0
     # distinct corpora in arrival order (dict-as-ordered-set: submit must
@@ -98,6 +117,8 @@ class FlushEvent:
     n_queries: int
     n_corpora: int
     at: float                       # clock time the flush fired
+    terms: Optional[Tuple[int, ...]] = None  # search kinds only
+    k: Optional[int] = None                  # search kinds only
 
 
 class AsyncAnalyticsServer:
@@ -129,6 +150,13 @@ class AsyncAnalyticsServer:
                    ``max_batch`` chunks.  Clamped by the devices actually
                    in the engine's mesh; 1 (default) preserves the
                    original single-device flush policy exactly.
+    max_pending:   queue-depth bound (backpressure).  ``None`` (default):
+                   unbounded, the original behaviour.  With a bound, a
+                   submit that would exceed it raises :class:`QueueFull`
+                   unless ``block=True``, which instead waits for a flush
+                   to free space.  ``ServerStats.max_queue_depth`` records
+                   the observed high-water mark, ``stats.rejected`` the
+                   refused submissions.
     """
 
     def __init__(self, server: AnalyticsServer, *,
@@ -137,15 +165,19 @@ class AsyncAnalyticsServer:
                  default_latency: float = DEFAULT_LATENCY_ESTIMATE,
                  clock: Callable[[], float] = time.monotonic,
                  poll_interval: float = 0.001,
-                 target_shards: int = 1):
+                 target_shards: int = 1,
+                 max_pending: Optional[int] = None):
         if idle_timeout < 0:
             raise ValueError("idle_timeout must be >= 0")
         if poll_interval <= 0:
             raise ValueError("poll_interval must be > 0")
         if target_shards < 1:
             raise ValueError("target_shards must be >= 1")
+        if max_pending is not None and max_pending < 1:
+            raise ValueError("max_pending must be >= 1 (or None)")
         self._engine = server
         self.target_shards = target_shards
+        self.max_pending = max_pending
         self.idle_timeout = float(idle_timeout)
         self.max_wait = (10.0 * self.idle_timeout if max_wait is None
                          else float(max_wait))
@@ -157,6 +189,9 @@ class AsyncAnalyticsServer:
         self._pending: Dict[Tuple, _Group] = {}
         self._depth = 0                      # total pending queries, O(1)
         self._lock = threading.RLock()
+        # signalled whenever _pop lowers the depth (or the queue closes):
+        # wakes submits blocked on the max_pending bound
+        self._space = threading.Condition(self._lock)
         self._exec_lock = threading.Lock()   # one engine call at a time
         # bounded observability ring (long-lived servers must not leak)
         self.flush_log: Deque[FlushEvent] = deque(maxlen=4096)
@@ -176,26 +211,43 @@ class AsyncAnalyticsServer:
             return self._depth
 
     # ------------------------------------------------------------ submit --
-    def submit(self, query: Query, deadline: Optional[float] = None
-               ) -> Future:
+    def submit(self, query: Query, deadline: Optional[float] = None,
+               block: bool = False) -> Future:
         """Enqueue one query; returns a future resolving to exactly what
         ``AnalyticsServer.run([query])[0]`` would.  ``deadline`` is an
         absolute time in the server's clock domain (``None``: flushed by
         ``max_batch`` or ``idle`` only).  Invalid queries raise here, not on
-        the future."""
+        the future.
+
+        With ``max_pending`` set, a submit into a full queue raises
+        :class:`QueueFull` — or, when ``block=True``, waits until a flush
+        frees space (something else must drive flushes: the background
+        thread, or another thread polling/draining).  A close() while
+        blocked raises ``RuntimeError`` like any post-close submit."""
         self._engine.validate(query)
         to_flush: Optional[_Group] = None
         fut: Future = Future()
         with self._lock:
-            if self._closed:
-                raise RuntimeError("queue is closed")
+            while True:
+                if self._closed:
+                    raise RuntimeError("queue is closed")
+                if (self.max_pending is None
+                        or self._depth < self.max_pending):
+                    break
+                if not block:
+                    self.stats.rejected += 1
+                    raise QueueFull(
+                        f"queue depth {self._depth} at max_pending="
+                        f"{self.max_pending}")
+                self._space.wait()
             now = self._now()
             gk = query.group_key()
             key = (gk, self._engine.size_bucket(query.corpus))
             g = self._pending.get(key)
             if g is None:
-                kind, l = gk
-                g = self._pending[key] = _Group(kind=kind, l=l)
+                kind, l, terms, k = gk
+                g = self._pending[key] = _Group(kind=kind, l=l, terms=terms,
+                                                k=k)
             g.add(_Pending(query, deadline, fut, now))
             self.stats.submitted += 1
             self._depth += 1
@@ -264,9 +316,11 @@ class AsyncAnalyticsServer:
             self._flush_group(g, "drain", now)
 
     def _pop(self, key: Tuple) -> _Group:
-        """Remove a group from the queue (lock held by caller)."""
+        """Remove a group from the queue (lock held by caller); wakes any
+        submit blocked on the ``max_pending`` bound."""
         g = self._pending.pop(key)
         self._depth -= len(g.items)
+        self._space.notify_all()
         return g
 
     # ------------------------------------------------------------- flush --
@@ -284,7 +338,7 @@ class AsyncAnalyticsServer:
             try:
                 with self._exec_lock:
                     by_corpus = self._engine.run_group(
-                        g.kind, names, l=g.l,
+                        g.kind, names, l=g.l, terms=g.terms, k=g.k,
                         target_shards=self.target_shards)
             except Exception as e:              # noqa: BLE001 — fanned out
                 for p in live:
@@ -296,7 +350,7 @@ class AsyncAnalyticsServer:
             self.stats.count_flush(reason)
             self.flush_log.append(FlushEvent(
                 reason=reason, kind=g.kind, l=g.l, n_queries=len(live),
-                n_corpora=len(names), at=now))
+                n_corpora=len(names), at=now, terms=g.terms, k=g.k))
 
     # ---------------------------------------------------------- threaded --
     def start(self) -> "AsyncAnalyticsServer":
@@ -322,6 +376,7 @@ class AsyncAnalyticsServer:
         with self._lock:
             self._closed = True
             t, self._thread = self._thread, None
+            self._space.notify_all()     # blocked submits must fail, not hang
         if t is not None:
             self._stop.set()
             self._wake.set()

@@ -99,6 +99,68 @@ def oracle_ranked_inverted_index(ga: GrammarArrays,
     return order.T, ranked.T
 
 
+# ------------------------------------------------------------- search --
+# float32 constants + expression ORDER deliberately mirror
+# repro/search/scoring.py and repro/search/engine.py op for op: IEEE
+# elementwise float32 add/mul/div are exactly specified and numpy's log is
+# applied to identical float32 inputs on both sides (the engine keeps its
+# idf/normalizer prep on host, in numpy, for exactly this reason), so the
+# differential suite can demand bit equality of scores AND rankings.
+_K1 = np.float32(1.2)
+_B = np.float32(0.75)
+_ONE = np.float32(1.0)
+_HALF = np.float32(0.5)
+_K1P1 = _K1 + _ONE
+
+
+def oracle_search(ga: GrammarArrays, terms, k: int = 10,
+                  scheme: str = "bm25",
+                  stream: np.ndarray | None = None
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """BM25 / TF-IDF top-k ranking recomputed from the decompressed
+    stream: tf/df/dl from a plain scan (via :func:`oracle_term_vector`),
+    scoring in sequential-term float32, stable argsort for the ranking
+    (ties -> lower file id, like ``jax.lax.top_k``)."""
+    tv = oracle_term_vector(ga, stream)
+    F, V = tv.shape
+    dl = tv.sum(axis=1, dtype=np.float32)
+    df = (tv > 0).sum(axis=0).astype(np.float32)
+    n = np.float32(F)
+    avgdl = np.float32(dl.sum(dtype=np.float32)) / np.float32(max(F, 1))
+    if not avgdl > 0:
+        avgdl = _ONE
+    norm = (_K1 * (_ONE - _B + _B * (dl / np.float32(avgdl)))).astype(
+        np.float32)
+    t = np.asarray(terms, np.int64)
+    ok = (t >= 0) & (t < V)
+    tf_q = np.zeros((F, len(t)), np.float32)
+    tf_q[:, ok] = tv[:, t[ok]]
+    df_q = np.zeros(len(t), np.float32)
+    df_q[ok] = df[t[ok]]
+    if scheme == "bm25":
+        idf = np.log(_ONE + (n - df_q + _HALF) / (df_q + _HALF)).astype(
+            np.float32)
+        quot = (tf_q * _K1P1) / (tf_q + norm[:, None])
+    elif scheme == "tfidf":
+        idf = (np.log((n + _ONE) / (df_q + _ONE)) + _ONE).astype(np.float32)
+        quot = tf_q
+    else:
+        raise ValueError(f"unknown scoring scheme {scheme!r}")
+    score = np.zeros(F, np.float32)
+    for j in range(len(t)):           # sequential term order, like the engine
+        score = score + idf[j] * quot[:, j]
+    k_eff = min(int(k), F)
+    order = np.argsort(-score, kind="stable")[:k_eff].astype(np.int32)
+    return order, score[order]
+
+
+def oracle_search_kind(ga: GrammarArrays, kind: str, terms, k: int = 10,
+                       stream: np.ndarray | None = None):
+    """``oracle_search`` addressed by serving query kind."""
+    scheme = {"search_bm25": "bm25", "search_tfidf": "tfidf"}[kind]
+    return oracle_search(ga, terms, k=k, scheme=scheme, stream=stream)
+
+
 def oracle_sequence_count(ga: GrammarArrays, l: int = 3,
                           stream: np.ndarray | None = None
                           ) -> Tuple[np.ndarray, np.ndarray]:

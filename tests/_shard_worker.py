@@ -12,7 +12,11 @@ Asserts (exit code is the test result):
      sharded_calls counted; a single-corpus query arriving in sharded
      mode (shard_min_corpora=1) is bit-equal too;
   4. queue: target_shards > 1 raises the fill condition to
-     chunk_capacity and drains bit-equal to the sync path.
+     chunk_capacity and drains bit-equal to the sync path;
+  5. search: BM25/TF-IDF top-k through the sharded pack (per-shard
+     scoring + top-k, host merge) bit-equal to the decompress-then-scan
+     oracle and the single-device batched path on the same ragged shard
+     counts, including the sharded server mode.
 """
 
 import os
@@ -30,10 +34,11 @@ from repro.core import (ANALYTICS_KINDS, GrammarBatch, compress_files,
                         flatten, run_batched)
 from repro.distributed.shard_batch import (corpus_mesh, mesh_size,
                                            shard_batch, run_sharded)
+from repro.search import batched_search
 from repro.serving.analytics_server import AnalyticsServer, Query
 from repro.serving.queue import AsyncAnalyticsServer
 
-from _oracle import assert_result_equal, full_stream, oracle
+from _oracle import assert_result_equal, full_stream, oracle, oracle_search
 
 rng = np.random.default_rng(20260801)
 
@@ -145,9 +150,46 @@ def test_queue_target_shards():
           f"(flushes={dict(srv.stats.flushes)})")
 
 
+def test_sharded_search_matches_oracle_and_single_device():
+    mesh = corpus_mesh()
+    terms = (1, 7, 7, 23, 5000)          # duplicate + out-of-vocab term
+    for n in (5, 11):
+        gas = make_corpora(n)
+        gb1 = GrammarBatch.build(gas)
+        streams = [full_stream(ga) for ga in gas]
+        for kind, scheme in (("search_bm25", "bm25"),
+                             ("search_tfidf", "tfidf")):
+            wants = [oracle_search(ga, terms, k=4, scheme=scheme, stream=s)
+                     for ga, s in zip(gas, streams)]
+            got = run_sharded(gas, kind, mesh=mesh, terms=terms, k=4)
+            single = batched_search(gb1, terms, k=4, scheme=scheme)
+            assert len(got) == n
+            for i, (g_i, w_i, s_i) in enumerate(zip(got, wants, single)):
+                assert_result_equal(g_i, w_i, kind,
+                                    f"(sharded search, N={n}, corpus {i})")
+                results_equal(g_i, s_i, kind,
+                              f"(search vs single-device, N={n}, "
+                              f"corpus {i})")
+    # sharded server mode serves search bit-equal to the unsharded server
+    gas = {f"s{i}": ga for i, ga in enumerate(make_corpora(12))}
+    srv_s = AnalyticsServer(max_batch=4, shard_min_corpora=2)
+    srv_1 = AnalyticsServer(max_batch=4, mesh=None)
+    for name, ga in gas.items():
+        srv_s.register(name, ga)
+        srv_1.register(name, ga)
+    qs = [Query(f"s{i}", "search_bm25", terms=terms, k=3)
+          for i in range(12)]
+    for got, want, q in zip(srv_s.run(qs), srv_1.run(qs), qs):
+        results_equal(got, want, q.kind, f"(server sharded search, "
+                                         f"{q.corpus})")
+    assert srv_s.stats.sharded_calls > 0, srv_s.stats
+    print("sharded search == oracle == single-device OK")
+
+
 if __name__ == "__main__":
     test_sharded_matches_oracle_and_single_device()
     test_shard_signature_reuse()
     test_server_sharded_equals_unsharded()
     test_queue_target_shards()
+    test_sharded_search_matches_oracle_and_single_device()
     print("SHARDED ALL OK")

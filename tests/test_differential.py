@@ -15,6 +15,13 @@ execution paths:
   host devices; tests/_shard_worker.py covers it on single-device hosts
   via a subprocess.
 
+The search subsystem (``repro.search``) is held to the same discipline:
+BM25/TF-IDF top-k rankings — document ids AND float32 scores — must be
+bit-equal to a numpy recomputation from the decompressed stream, on the
+single-corpus, batched, and device-sharded paths (the engine keeps its
+transcendental prep on host and its device accumulation FMA-free exactly
+so this bar is meetable; see repro/search/engine.py).
+
 Runs without hypothesis via tests/_hypothesis_compat (fixed seeded
 examples); the ``slow``-marked test rescales the same check to larger
 grammars (CI's scheduled lane; ``DIFF_SCALE`` env var controls size).
@@ -32,11 +39,25 @@ from repro.core import (ANALYTICS_KINDS, Grammar, GrammarBatch,
                         inverted_index, ranked_inverted_index, run_batched,
                         sequence_count, sort_words, term_vector, word_count)
 from repro.distributed.shard_batch import corpus_mesh, run_sharded
+from repro.search import batched_search, search_corpus
 from _hypothesis_compat import given, settings, st
-from _oracle import assert_result_equal, full_stream, oracle, oracle_batch
+from _oracle import (assert_result_equal, full_stream, oracle, oracle_batch,
+                     oracle_search)
 from conftest import make_repetitive_files
 
 BATCHED_METHODS = ("frontier", "leveled", "frontier_ell", "leveled_ell")
+SEARCH_SCHEMES = ("bm25", "tfidf")
+
+
+def _query_terms(rng, gas):
+    """Random multi-term query: mostly in-vocab, some duplicated, one
+    guaranteed out-of-vocab id (must contribute exactly nothing)."""
+    vmax = max(ga.vocab_size for ga in gas)
+    nt = int(rng.integers(1, 7))
+    terms = [int(t) for t in rng.integers(0, vmax, nt)]
+    terms.append(terms[0])                   # duplicate term
+    terms.append(vmax + 17)                  # out-of-vocab
+    return tuple(terms)
 
 
 def _random_grammar(rng, scale: int = 1):
@@ -138,6 +159,60 @@ def test_sharded_paths_match_oracle(seed):
 
 
 @settings(max_examples=4, deadline=None)
+@given(st.integers(0, 100_000))
+def test_search_rankings_match_oracle(seed):
+    """BM25/TF-IDF top-k rankings — doc ids AND float32 scores — bit-equal
+    to the numpy decompress-then-scan oracle on the single-corpus and
+    batched paths, for random multi-term queries with duplicates and
+    out-of-vocab terms, across traversal methods."""
+    rng = np.random.default_rng(seed)
+    gas = [_random_grammar(rng)[0] for _ in range(3)]
+    gb = GrammarBatch.build(gas)
+    terms = _query_terms(rng, gas)
+    k = int(rng.integers(1, 9))
+    for scheme in SEARCH_SCHEMES:
+        wants = [oracle_search(ga, terms, k=k, scheme=scheme) for ga in gas]
+        for ga, want in zip(gas, wants):
+            assert_result_equal(
+                search_corpus(ga, terms, k=k, scheme=scheme), want,
+                f"search_{scheme}", f"(single, seed={seed})")
+        for method in ("frontier", "leveled", "frontier_ell"):
+            got = batched_search(gb, terms, k=k, scheme=scheme,
+                                 method=method)
+            for i, (g_i, w_i) in enumerate(zip(got, wants)):
+                assert_result_equal(
+                    g_i, w_i, f"search_{scheme}",
+                    f"(batched {method}, corpus {i}, seed={seed}, "
+                    f"terms={terms}, k={k})")
+
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs a multi-device mesh (CI multidevice lane "
+                           "forces 8 CPU host devices)")
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 100_000))
+def test_sharded_search_rankings_match_oracle(seed):
+    """Search through the device-sharded pack (per-shard scoring + top-k,
+    host merge) — ragged N=5 exercises shard padding — bit-equal to the
+    oracle and to the single-device batched path."""
+    rng = np.random.default_rng(seed)
+    gas = [_random_grammar(rng)[0] for _ in range(5)]
+    gb1 = GrammarBatch.build(gas)
+    mesh = corpus_mesh()
+    terms = _query_terms(rng, gas)
+    k = int(rng.integers(1, 6))
+    for kind, scheme in (("search_bm25", "bm25"), ("search_tfidf", "tfidf")):
+        wants = [oracle_search(ga, terms, k=k, scheme=scheme) for ga in gas]
+        got = run_sharded(gas, kind, mesh=mesh, terms=terms, k=k)
+        single = batched_search(gb1, terms, k=k, scheme=scheme)
+        for i, (g_i, w_i, s_i) in enumerate(zip(got, wants, single)):
+            assert_result_equal(g_i, w_i, kind,
+                                f"(sharded, corpus {i}, seed={seed})")
+            assert_result_equal(g_i, s_i, kind,
+                                f"(sharded vs single-device, corpus {i})")
+
+
+@settings(max_examples=4, deadline=None)
 @given(st.integers(2, 5), st.integers(0, 100_000))
 def test_sequence_count_window_lengths_match_oracle(l, seed):
     rng = np.random.default_rng(seed)
@@ -182,3 +257,14 @@ def test_differential_slow_larger_grammars(seeded_rng):
             for g_i, w_i in zip(got, wants):
                 assert_result_equal(g_i, w_i, kind,
                                     f"(batched {method}, slow)")
+    terms = _query_terms(seeded_rng, gas)
+    for scheme in SEARCH_SCHEMES:
+        wants = [oracle_search(ga, terms, k=10, scheme=scheme, stream=s)
+                 for ga, s in zip(gas, streams)]
+        got = batched_search(gb, terms, k=10, scheme=scheme)
+        for ga, w_i, g_i in zip(gas, wants, got):
+            assert_result_equal(g_i, w_i, f"search_{scheme}",
+                                "(batched, slow)")
+            assert_result_equal(
+                search_corpus(ga, terms, k=10, scheme=scheme), w_i,
+                f"search_{scheme}", "(single, slow)")

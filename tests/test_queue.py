@@ -17,11 +17,14 @@ Time is fully simulated (``clock=`` injection): the trace loop drives
 exactly from the conftest-logged seed.
 """
 
+import threading
+
 import numpy as np
 import pytest
 
 from repro.core import compress_files, flatten, word_count
-from repro.serving import AnalyticsServer, AsyncAnalyticsServer, Query
+from repro.serving import (AnalyticsServer, AsyncAnalyticsServer, Query,
+                           QueueFull)
 from _hypothesis_compat import given, settings, st
 from _oracle import assert_result_equal
 from conftest import make_repetitive_files
@@ -175,6 +178,84 @@ def test_cancelled_future_does_not_break_its_flush():
     aq2.drain()
     assert eng.stats.batched_calls + eng.stats.single_calls == calls_before
     assert aq2.flush_log[-1].n_queries == 0
+
+
+def test_backpressure_rejects_when_full():
+    """max_pending bounds the queue depth: overflowing submits raise
+    QueueFull (counted on stats.rejected), space freed by a flush admits
+    new traffic, and the high-water mark is recorded."""
+    eng = _build_engine(n_corpora=4, seed=23)
+    clk = SimClock()
+    aq = AsyncAnalyticsServer(eng, idle_timeout=0.5, clock=clk,
+                              max_pending=2)
+    # distinct kinds -> distinct groups: nothing fills max_batch
+    f1 = aq.submit(Query("c0", "word_count"))
+    f2 = aq.submit(Query("c1", "sort"))
+    assert aq.queue_depth == 2
+    with pytest.raises(QueueFull):
+        aq.submit(Query("c2", "term_vector"))
+    assert eng.stats.rejected == 1
+    assert not f1.done() and not f2.done()      # rejection flushed nothing
+    clk.t = 1.0
+    aq.poll()                                   # idle flush frees the queue
+    assert f1.done() and f2.done()
+    f3 = aq.submit(Query("c2", "term_vector"))  # space again
+    aq.drain()
+    assert f3.done()
+    assert eng.stats.max_queue_depth >= 2
+    with pytest.raises(ValueError):
+        AsyncAnalyticsServer(eng, max_pending=0)
+
+
+def test_backpressure_block_waits_for_space():
+    """submit(block=True) parks instead of raising and resumes as soon as
+    a flush (driven elsewhere) frees queue depth."""
+    eng = _build_engine(n_corpora=4, seed=29)
+    aq = AsyncAnalyticsServer(eng, idle_timeout=100.0, clock=SimClock(),
+                              max_pending=1)
+    aq.submit(Query("c0", "word_count"))
+    entered = threading.Event()
+    futs = []
+
+    def blocked_submit():
+        entered.set()
+        futs.append(aq.submit(Query("c1", "sort"), block=True))
+
+    t = threading.Thread(target=blocked_submit)
+    t.start()
+    entered.wait(5)
+    assert t.is_alive()                         # parked on the full queue
+    aq.drain()                                  # frees space -> unblocks
+    t.join(timeout=10)
+    assert not t.is_alive() and len(futs) == 1
+    aq.drain()
+    assert futs[0].done()
+    _assert_same(futs[0].result(),
+                 eng.run([Query("c1", "sort")])[0])
+    assert eng.stats.rejected == 0              # block never rejects
+
+
+def test_backpressure_blocked_submit_raises_on_close():
+    eng = _build_engine(n_corpora=2, seed=31)
+    aq = AsyncAnalyticsServer(eng, idle_timeout=100.0, clock=SimClock(),
+                              max_pending=1)
+    aq.submit(Query("c0", "word_count"))
+    raised = threading.Event()
+
+    def blocked_submit():
+        try:
+            aq.submit(Query("c1", "word_count"), block=True)
+        except RuntimeError:
+            raised.set()
+
+    t = threading.Thread(target=blocked_submit)
+    t.start()
+    # close() must wake the blocked submit and fail it, never hang it
+    import time as _time
+    _time.sleep(0.05)
+    aq.close()
+    t.join(timeout=10)
+    assert raised.is_set()
 
 
 def test_submit_after_close_raises_instead_of_hanging():
