@@ -1,0 +1,67 @@
+"""Client-side trace synthesis for the open-loop load harness.
+
+Deliberately jax-free: :func:`client_trace` runs inside ``multiprocessing``
+*spawn* workers (one per simulated client), and a worker that only needs
+numpy starts in milliseconds — importing the serving stack (and jax) there
+would cost seconds per process and buy nothing.  ``bench_load`` imports
+this module for the same definitions on the parent side.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+#: analytics + search mix, weighted toward cheap point lookups
+KIND_WEIGHTS = (
+    ("word_count", 0.30),
+    ("term_vector", 0.20),
+    ("sort", 0.15),
+    ("sequence_count", 0.10),
+    ("search_bm25", 0.15),
+    ("search_tfidf", 0.10),
+)
+
+
+def zipf_popularity(n: int, s: float) -> np.ndarray:
+    """Normalized rank-zipf pmf over ``n`` corpora: p_r ∝ 1/(r+1)^s."""
+    w = 1.0 / np.arange(1, n + 1, dtype=np.float64) ** s
+    return w / w.sum()
+
+
+def client_trace(args: tuple) -> list:
+    """One client's arrival schedule — runs inside the worker pool.
+
+    Returns ``[(at_s, corpus_idx, kind, rel_deadline | None), ...]`` with
+    arrivals from a burst-modulated Poisson process: phase lengths are
+    exponential, burst phases scale the instantaneous rate by
+    ``burst_factor``, calm phases compensate so the long-run mean rate
+    stays ``rate_qps`` (offered load is what the spec says it is).
+    """
+    (seed, duration_s, rate_qps, n_corpora, zipf_s, deadline_frac,
+     dl_lo, dl_hi, burst_factor, burst_frac, mean_phase_s) = args
+    rng = np.random.default_rng(seed)
+    pop = zipf_popularity(n_corpora, zipf_s)
+    kinds = [k for k, _ in KIND_WEIGHTS]
+    kw = np.array([w for _, w in KIND_WEIGHTS])
+    kw = kw / kw.sum()
+    # calm rate chosen so  burst_frac*burst + (1-burst_frac)*calm == rate
+    calm_rate = rate_qps / (1.0 - burst_frac + burst_frac * burst_factor)
+    burst_rate = calm_rate * burst_factor
+    out = []
+    t = 0.0
+    in_burst = rng.random() < burst_frac
+    phase_end = float(rng.exponential(mean_phase_s))
+    while t < duration_s:
+        rate = burst_rate if in_burst else calm_rate
+        t += float(rng.exponential(1.0 / max(rate, 1e-9)))
+        while t >= phase_end:                  # cross into the next phase
+            in_burst = not in_burst
+            phase_end += float(rng.exponential(mean_phase_s))
+        if t >= duration_s:
+            break
+        c = int(rng.choice(n_corpora, p=pop))
+        kind = kinds[int(rng.choice(len(kinds), p=kw))]
+        rel_dl = (float(rng.uniform(dl_lo, dl_hi))
+                  if rng.random() < deadline_frac else None)
+        out.append((t, c, kind, rel_dl))
+    return out

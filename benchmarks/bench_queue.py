@@ -7,8 +7,11 @@ emits ``queue/*`` rows:
 
 * median / p95 submit-to-result latency (us) and end-to-end throughput
   (the mean also lands in the JSON — it carries any residual compile tail);
-* flush counts by reason (max_batch / deadline / idle / drain) — the
-  policy's fingerprint on this mix;
+* flush counts by reason (max_batch / deadline / idle / max_wait / drain)
+  — the policy's fingerprint on this mix.  Shedding (the orthogonal
+  ``n_shed`` dimension on each flush) stays at zero here: deadlines in
+  this trace are comfortably feasible, so any shed would flag a policy
+  regression.  ``bench_load`` is where shedding is exercised on purpose;
 * the engine-call amplification (flushes per query: < 1 means batching).
 
 Everything is warmed (compiled) before the trace so the numbers are

@@ -5,7 +5,9 @@ Registers a few Table-II-analogue corpora, starts the background flush
 thread, and fires a burst of mixed queries — some with tight deadlines,
 some best-effort — at the queue.  The flush policy packs them into batched
 engine calls; the printed stats show how many device calls the traffic
-actually cost and why each flush fired.
+actually cost and why each flush fired.  The tail of the demo submits a
+query whose deadline is already hopeless — the queue sheds it with
+`DeadlineExceeded` instead of wasting an engine slot on it.
 
     PYTHONPATH=src python examples/serve_async.py
 """
@@ -14,7 +16,8 @@ import time
 
 from repro.core import compress_files, flatten
 from repro.data.synthetic import make_table2_corpus, TABLE2
-from repro.serving import AnalyticsServer, AsyncAnalyticsServer, Query
+from repro.serving import (AnalyticsServer, AsyncAnalyticsServer,
+                           DeadlineExceeded, Query)
 
 
 def main() -> None:
@@ -47,6 +50,16 @@ def main() -> None:
         results = {k: f.result(timeout=60) for k, f in futures.items()}
         dt = time.monotonic() - t0
 
+        # a deadline that has already passed is shed at flush time: the
+        # future raises instead of the engine computing a dead answer
+        hopeless = queue.submit(Query("A", "word_count"),
+                                deadline=time.monotonic() - 0.001)
+        try:
+            hopeless.result(timeout=60)
+            print("\nexpired-deadline query unexpectedly returned")
+        except DeadlineExceeded as e:
+            print(f"\nexpired-deadline query shed: {e}")
+
     wc_a = results["wc_A"]
     order, counts = results["sort_D"]
     grams, gcounts = results["seq_A"]
@@ -57,7 +70,7 @@ def main() -> None:
     print(f"corpus B term-vector shape: {results['tv_B'].shape}")
 
     st = engine.stats
-    print(f"\nflushes by reason: {st.flushes}")
+    print(f"\nflushes by reason: {st.flushes} (shed={st.shed})")
     print(f"engine calls: {st.batched_calls} batched "
           f"+ {st.single_calls} single for {st.submitted} submissions "
           f"(max queue depth {st.max_queue_depth})")

@@ -22,9 +22,15 @@ from repro.core.traversal import per_file_weights as _per_file_weights
 from repro.core.traversal import top_down_weights as _top_down_weights
 
 
-_ARRAY_FIELDS = [f.name for f in dataclasses.fields(GrammarArrays)
-                 if f.type == "np.ndarray"]
-_META_FIELDS = ["vocab_size", "num_files", "num_rules", "num_levels"]
+_META_FIELDS = ("vocab_size", "num_files", "num_rules", "num_levels")
+# Every GrammarArrays field that is not scalar metadata is a numpy array.
+# Selecting by exclusion is robust where the old string comparison
+# (``f.type == "np.ndarray"``) was not: under `from __future__ import
+# annotations` styles, aliased imports, or real type objects the textual
+# form changes and arrays would silently vanish from save/load
+# (tests/test_data.py round-trips every field to keep this honest).
+_ARRAY_FIELDS = tuple(f.name for f in dataclasses.fields(GrammarArrays)
+                      if f.name not in _META_FIELDS)
 
 
 @dataclass
@@ -76,15 +82,38 @@ class CompressedCorpus:
 
     def window(self, file_id: int, offset: int, length: int) -> np.ndarray:
         """Expand `length` word tokens of file `file_id` from `offset`,
-        clamped to the file (no decompression outside the window)."""
-        start = int(self.file_starts[file_id]) + int(offset)
-        length = int(min(length, self.file_lens[file_id] - offset))
-        return expand_range(self.ga, start, length)
+        clamped to the file end (no decompression outside the window).
+
+        ``offset`` must lie inside the file (``0 <= offset <= file_len``;
+        the == edge yields an empty window).  A negative offset would
+        silently expand the *previous* file's tokens and one past the end
+        would compute a negative length — both raise instead.
+        """
+        if not 0 <= int(file_id) < len(self.file_lens):
+            raise IndexError(f"file_id {file_id} out of range "
+                             f"[0, {len(self.file_lens)})")
+        offset, length = int(offset), int(length)
+        if length < 0:
+            raise ValueError(f"window length must be >= 0, got {length}")
+        flen = int(self.file_lens[file_id])
+        if not 0 <= offset <= flen:
+            raise ValueError(f"offset {offset} outside file {file_id} "
+                             f"(length {flen})")
+        start = int(self.file_starts[file_id]) + offset
+        return expand_range(self.ga, start, min(length, flen - offset))
 
     def global_window(self, offset: int, length: int) -> np.ndarray:
         """Expand from the concatenated corpus stream (splitters included —
-        callers use them as document separators)."""
-        return expand_range(self.ga, int(offset), int(length))
+        callers use them as document separators).  ``offset`` must lie
+        inside the stream; ``length`` is clamped to the stream end."""
+        offset, length = int(offset), int(length)
+        if length < 0:
+            raise ValueError(f"window length must be >= 0, got {length}")
+        total = int(self.ga.exp_len[0])     # root expansion: whole stream
+        if not 0 <= offset <= total:
+            raise ValueError(f"offset {offset} outside the corpus stream "
+                             f"(length {total})")
+        return expand_range(self.ga, offset, min(length, total - offset))
 
     # ------------------------------------------------- memoized traversal --
     def top_down_weights(self, method: str = "frontier"):

@@ -5,8 +5,10 @@ async deadline-aware submission queue."""
 from .decode import make_serve_step, make_prefill_step, greedy_generate
 from .analytics_server import AnalyticsServer, Query, ServerStats, \
     SERVED_KINDS
-from .queue import AsyncAnalyticsServer, FlushEvent, QueueFull
+from .queue import (AsyncAnalyticsServer, DeadlineExceeded, FlushEvent,
+                    QueueFull)
 
 __all__ = ["make_serve_step", "make_prefill_step", "greedy_generate",
            "AnalyticsServer", "Query", "ServerStats", "SERVED_KINDS",
-           "AsyncAnalyticsServer", "FlushEvent", "QueueFull"]
+           "AsyncAnalyticsServer", "DeadlineExceeded", "FlushEvent",
+           "QueueFull"]

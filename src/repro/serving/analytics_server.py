@@ -138,6 +138,9 @@ class ServerStats:
     flushes: Dict[str, int] = field(default_factory=dict)  # reason -> count
     max_queue_depth: int = 0           # high-water pending-query count
     rejected: int = 0                  # submits refused by max_pending
+    shed: int = 0                      # queries shed at flush time because
+    #                                    their deadline had already passed
+    #                                    (futures carry DeadlineExceeded)
 
     # ----- latency estimator -----
     # EWMA of observed chunk latencies keyed by (kind, chunk signature);

@@ -39,6 +39,17 @@ space (requires something else to drive flushes: the background thread,
 or another thread calling :meth:`poll`/:meth:`drain`).  The depth
 high-water mark is ``ServerStats.max_queue_depth``.
 
+Deadline shedding: a query whose deadline has *already passed* when its
+group flushes can no longer produce a useful answer — executing it would
+burn an engine slot for a result nobody can use.  Such queries are shed
+at flush time: their futures get a :class:`DeadlineExceeded` exception
+instead of a result, ``stats.shed`` counts them, and each
+:class:`FlushEvent` records its group's shed count (``n_shed``).
+Shedding composes with ``max_pending`` backpressure into the overload
+contract the load harness (benchmarks/bench_load.py) tests end to end:
+under sustained overload the server sheds and rejects but never crashes,
+and every non-shed result stays bit-identical to the sync path.
+
 Because flushes call the same ``run_group`` / ``execute_chunk`` core as the
 sync path, results are bit-identical to a one-shot ``AnalyticsServer.run``
 of the same queries (tests/test_queue.py fuzzes exactly that).
@@ -73,6 +84,12 @@ from .analytics_server import (DEFAULT_LATENCY_ESTIMATE, AnalyticsServer,
 
 class QueueFull(RuntimeError):
     """submit() would push the pending-query depth past ``max_pending``."""
+
+
+class DeadlineExceeded(RuntimeError):
+    """The query's deadline had already passed when its group flushed, so
+    it was shed instead of executed (``stats.shed``); the future carries
+    this exception instead of a result."""
 
 
 @dataclass
@@ -110,13 +127,22 @@ class _Group:
 
 @dataclass(frozen=True)
 class FlushEvent:
-    """One flush, as observed by tests/benchmarks (``flush_log``)."""
+    """One flush, as observed by tests/benchmarks (``flush_log``).
+
+    ``reason`` is the transition that fired the flush — exactly one of
+    ``max_batch`` / ``deadline`` / ``idle`` / ``max_wait`` / ``drain``.
+    ``n_shed`` is orthogonal to the reason: however the flush fired, the
+    group members whose deadline had already passed were shed
+    (:class:`DeadlineExceeded`) instead of executed, and ``n_queries``
+    counts only the queries actually answered by the engine call.
+    """
     reason: str         # max_batch | deadline | idle | max_wait | drain
     kind: str
     l: Optional[int]
     n_queries: int
     n_corpora: int
     at: float                       # clock time the flush fired
+    n_shed: int = 0                 # group members shed (expired deadline)
     terms: Optional[Tuple[int, ...]] = None  # search kinds only
     k: Optional[int] = None                  # search kinds only
 
@@ -328,8 +354,20 @@ class AsyncAnalyticsServer:
         # claim each future (running state): callers may have cancel()ed a
         # pending one — set_result on it would raise InvalidStateError,
         # starving the rest of the group and killing the serve loop
-        live = [p for p in g.items
-                if p.future.set_running_or_notify_cancel()]
+        claimed = [p for p in g.items
+                   if p.future.set_running_or_notify_cancel()]
+        # shed the expired: a deadline already in the past cannot be met by
+        # any execution, so the engine slot goes to queries that can still
+        # use it.  Fail the futures before the engine call — their callers
+        # unblock immediately instead of waiting out a batch they are not in.
+        shed = [p for p in claimed
+                if p.deadline is not None and now > p.deadline]
+        for p in shed:
+            p.future.set_exception(DeadlineExceeded(
+                f"deadline {p.deadline:.6f} passed before flush at "
+                f"{now:.6f} (queued {now - p.submitted_at:.6f}s)"))
+        live = [p for p in claimed
+                if p.deadline is None or now <= p.deadline]
         names: List[str] = []
         for p in live:
             if p.query.corpus not in names:
@@ -348,9 +386,11 @@ class AsyncAnalyticsServer:
                     p.future.set_result(by_corpus[p.query.corpus])
         with self._lock:                 # concurrent flushes race the stats
             self.stats.count_flush(reason)
+            self.stats.shed += len(shed)
             self.flush_log.append(FlushEvent(
                 reason=reason, kind=g.kind, l=g.l, n_queries=len(live),
-                n_corpora=len(names), at=now, terms=g.terms, k=g.k))
+                n_corpora=len(names), at=now, n_shed=len(shed),
+                terms=g.terms, k=g.k))
 
     # ---------------------------------------------------------- threaded --
     def start(self) -> "AsyncAnalyticsServer":

@@ -1,9 +1,9 @@
 """Data plane: tokenizer, store roundtrip, random access, pipeline."""
 
-import os
-import tempfile
+import dataclasses
 
 import numpy as np
+import pytest
 
 from repro.core import word_count
 from repro.data import (BatchPipeline, CompressedCorpus, Tokenizer,
@@ -37,6 +37,72 @@ def test_store_roundtrip_and_window(tmp_path):
     assert cc.stats()["compression_ratio"] > 1.2
     w = cc2.window(0, 37, 50)
     assert (w == files[0][37:87]).all()
+
+
+def test_window_bounds_are_validated():
+    """Regression: offset past the file end used to compute a negative
+    length (np.empty crash) and a negative offset silently expanded the
+    PREVIOUS file's tokens — both must raise, clearly."""
+    files = synthetic.make_table2_corpus("A")     # multi-file corpus
+    cc = CompressedCorpus.build(files, vocab_size=1200)
+    flen = int(cc.file_lens[1])
+    # interior reads still work, including the clamped tail ...
+    assert (cc.window(1, flen - 5, 50) == files[1][flen - 5:]).all()
+    # ... and the offset == file_len edge is an empty window, not an error
+    assert cc.window(1, flen, 10).size == 0
+    with pytest.raises(ValueError):
+        cc.window(1, flen + 1, 10)          # past the end
+    with pytest.raises(ValueError):
+        cc.window(1, -3, 10)                # would read file 0's tokens
+    with pytest.raises(ValueError):
+        cc.window(1, 0, -1)                 # negative length
+    with pytest.raises(IndexError):
+        cc.window(len(cc.file_lens), 0, 1)  # no such file
+    with pytest.raises(IndexError):
+        cc.window(-1, 0, 1)
+
+
+def test_global_window_bounds_are_validated():
+    files = synthetic.make_table2_corpus("D")
+    cc = CompressedCorpus.build(files, vocab_size=400)
+    total = int(cc.ga.exp_len[0])
+    # the full stream expands (splitters included), tail clamps, end edge
+    # is empty
+    assert cc.global_window(0, total).size == total
+    assert cc.global_window(total - 3, 10).size == 3
+    assert cc.global_window(total, 10).size == 0
+    with pytest.raises(ValueError):
+        cc.global_window(total + 1, 1)
+    with pytest.raises(ValueError):
+        cc.global_window(-1, 5)             # used to read from offset 0
+    with pytest.raises(ValueError):
+        cc.global_window(0, -2)
+
+
+def test_store_roundtrip_preserves_every_array_field(tmp_path):
+    """Regression: _ARRAY_FIELDS used to string-compare dataclass
+    annotations (`f.type == "np.ndarray"`), so an annotation-style change
+    silently dropped arrays from save/load.  Assert the field selection
+    covers exactly the ndarray fields and that each one round-trips."""
+    from repro.data.store import _ARRAY_FIELDS, _META_FIELDS
+    files = synthetic.make_table2_corpus("D")
+    cc = CompressedCorpus.build(files, vocab_size=400)
+    array_fields = {f.name for f in dataclasses.fields(cc.ga)
+                    if isinstance(getattr(cc.ga, f.name), np.ndarray)}
+    assert set(_ARRAY_FIELDS) == array_fields
+    assert set(_META_FIELDS) == {
+        f.name for f in dataclasses.fields(cc.ga)} - array_fields
+    p = str(tmp_path / "c.npz")
+    cc.save(p)
+    cc2 = CompressedCorpus.load(p)
+    for name in _ARRAY_FIELDS:
+        a, b = getattr(cc.ga, name), getattr(cc2.ga, name)
+        assert a.dtype == b.dtype and a.shape == b.shape, name
+        assert (a == b).all(), f"array field {name} did not survive"
+    for name in _META_FIELDS:
+        assert getattr(cc.ga, name) == getattr(cc2.ga, name), name
+    assert (cc2.file_starts == cc.file_starts).all()
+    assert (cc2.file_lens == cc.file_lens).all()
 
 
 def test_analytics_on_store():

@@ -3,14 +3,20 @@
 The invariants fuzzed here (tests run without hypothesis via
 _hypothesis_compat):
 
-* no submitted query ever starves — every future resolves, and a query
-  with a feasible deadline resolves no later than ``deadline + one poll
-  interval`` of simulated time;
+* no submitted query ever starves — every future resolves (with a result
+  or :class:`DeadlineExceeded`), and a query that resolves with a result
+  under a deadline did so no later than ``deadline + one poll interval``
+  of simulated time;
+* a query whose deadline has already passed at flush time is shed: its
+  future raises ``DeadlineExceeded``, the engine is never asked for it,
+  and ``stats.shed`` / ``FlushEvent.n_shed`` account for every shed
+  exactly once;
 * no flush ever packs more than ``max_batch`` distinct corpora, and every
   flush carries exactly one (kind, l) group;
 * the async path is bit-identical to a one-shot synchronous
-  ``AnalyticsServer.run`` of the same queries, whatever the arrival order,
-  deadlines, duplicates, and flush interleaving.
+  ``AnalyticsServer.run`` of the same queries for every non-shed result,
+  whatever the arrival order, deadlines, duplicates, shed mix, and flush
+  interleaving.
 
 Time is fully simulated (``clock=`` injection): the trace loop drives
 :meth:`AsyncAnalyticsServer.poll` on a fixed tick grid, so runs reproduce
@@ -23,8 +29,8 @@ import numpy as np
 import pytest
 
 from repro.core import compress_files, flatten, word_count
-from repro.serving import (AnalyticsServer, AsyncAnalyticsServer, Query,
-                           QueueFull)
+from repro.serving import (AnalyticsServer, AsyncAnalyticsServer,
+                           DeadlineExceeded, Query, QueueFull)
 from _hypothesis_compat import given, settings, st
 from _oracle import assert_result_equal
 from conftest import make_repetitive_files
@@ -111,6 +117,63 @@ def test_deadline_flush_fires_within_one_estimated_latency():
     aq.poll()                                   # 0.04 <= estimate: due now
     assert fut.done()
     assert aq.flush_log[-1].reason == "deadline"
+
+
+def test_expired_deadline_is_shed_not_executed():
+    """A query whose deadline passed before its flush gets DeadlineExceeded
+    and never reaches the engine; an expired singleton group therefore
+    costs zero engine calls (but still logs its flush)."""
+    eng = _build_engine(n_corpora=2, seed=41)
+    clk = SimClock()
+    aq = AsyncAnalyticsServer(eng, idle_timeout=100.0, clock=clk)
+    fut = aq.submit(Query("c0", "word_count"), deadline=0.5)
+    clk.t = 1.0                                 # deadline long gone
+    calls_before = eng.stats.batched_calls + eng.stats.single_calls
+    aq.poll()                                   # deadline condition fires
+    assert fut.done()
+    with pytest.raises(DeadlineExceeded):
+        fut.result()
+    assert eng.stats.batched_calls + eng.stats.single_calls == calls_before
+    assert eng.stats.shed == 1
+    ev = aq.flush_log[-1]
+    assert ev.n_shed == 1 and ev.n_queries == 0 and ev.n_corpora == 0
+    assert ev.reason == "deadline"
+
+
+def test_partial_shed_keeps_live_results_bit_identical():
+    """Shedding one group member must not disturb the others: live members
+    execute and stay bit-identical to the sync path."""
+    eng = _build_engine(n_corpora=3, seed=43)
+    clk = SimClock()
+    aq = AsyncAnalyticsServer(eng, idle_timeout=100.0, clock=clk)
+    f_dead = aq.submit(Query("c0", "word_count"), deadline=0.1)
+    f_live = aq.submit(Query("c1", "word_count"))
+    f_dup = aq.submit(Query("c1", "word_count"))    # duplicate rides along
+    clk.t = 0.5
+    aq.drain()
+    with pytest.raises(DeadlineExceeded):
+        f_dead.result()
+    want = eng.run([Query("c1", "word_count")])[0]
+    _assert_same(f_live.result(), want)
+    _assert_same(f_dup.result(), want)
+    assert eng.stats.shed == 1
+    ev = aq.flush_log[-1]
+    assert ev.reason == "drain" and ev.n_shed == 1
+    assert ev.n_queries == 2 and ev.n_corpora == 1
+
+
+def test_deadline_exactly_at_flush_time_is_not_shed():
+    """now == deadline is the boundary: only strictly-passed deadlines are
+    shed (the contract is 'already expired', not 'about to expire')."""
+    eng = _build_engine(n_corpora=2, seed=47)
+    clk = SimClock()
+    aq = AsyncAnalyticsServer(eng, idle_timeout=100.0, clock=clk)
+    fut = aq.submit(Query("c0", "word_count"), deadline=0.5)
+    clk.t = 0.5
+    aq.drain()
+    _assert_same(fut.result(),
+                 eng.run([Query("c0", "word_count")])[0])
+    assert eng.stats.shed == 0
 
 
 def test_idle_flush_after_timeout():
@@ -258,6 +321,65 @@ def test_backpressure_blocked_submit_raises_on_close():
     assert raised.is_set()
 
 
+def test_close_races_many_blocked_submits_under_running_thread():
+    """Lifecycle race: several submits parked on max_pending while the
+    background thread is live and another thread calls close().  Every
+    blocked submit must resolve — either admitted-and-drained by close()
+    or failed with RuntimeError — and nothing may hang."""
+    eng = _build_engine(n_corpora=4, seed=37)
+    # idle_timeout generous: blocked submits wait on close(), not a flush
+    aq = AsyncAnalyticsServer(eng, idle_timeout=60.0, poll_interval=0.001,
+                              max_pending=1).start()
+    aq.submit(Query("c0", "word_count"))
+    outcomes = []
+    started = threading.Barrier(4)
+
+    def blocked_submit(i):
+        started.wait(5)
+        try:
+            outcomes.append(("ok", aq.submit(Query(f"c{i}", "sort"),
+                                             block=True)))
+        except RuntimeError:
+            outcomes.append(("raised", None))
+
+    threads = [threading.Thread(target=blocked_submit, args=(i,))
+               for i in range(1, 4)]
+    for t in threads:
+        t.start()
+    started.wait(5)
+    import time as _time
+    _time.sleep(0.05)                   # let them reach the wait
+    aq.close()
+    for t in threads:
+        t.join(timeout=10)
+        assert not t.is_alive(), "blocked submit hung across close()"
+    assert len(outcomes) == 3
+    # admitted submits were drained by close(); the rest raised
+    for tag, fut in outcomes:
+        assert tag == "raised" or fut.done()
+
+
+def test_fully_cancelled_group_logs_flush_without_engine_call():
+    """A flush whose every future was cancel()ed must not call the engine
+    but must still log the flush (the observability ring stays complete) —
+    here via the poll path, not drain."""
+    eng = _build_engine(n_corpora=3, seed=53)
+    clk = SimClock()
+    aq = AsyncAnalyticsServer(eng, idle_timeout=0.5, clock=clk)
+    f1 = aq.submit(Query("c0", "word_count"))
+    f2 = aq.submit(Query("c0", "word_count"))   # same group, same corpus
+    assert f1.cancel() and f2.cancel()
+    calls_before = eng.stats.batched_calls + eng.stats.single_calls
+    log_before = len(aq.flush_log)
+    clk.t = 1.0
+    aq.poll()                                   # idle flush of a dead group
+    assert eng.stats.batched_calls + eng.stats.single_calls == calls_before
+    assert len(aq.flush_log) == log_before + 1
+    ev = aq.flush_log[-1]
+    assert ev.reason == "idle" and ev.n_queries == 0 and ev.n_corpora == 0
+    assert aq.queue_depth == 0
+
+
 def test_submit_after_close_raises_instead_of_hanging():
     eng = _shared_engine()
     aq = AsyncAnalyticsServer(eng, idle_timeout=100.0, clock=SimClock())
@@ -329,11 +451,22 @@ def test_fuzz_policy_never_starves_and_matches_sync(seed):
     clk = SimClock()
     aq = AsyncAnalyticsServer(eng, idle_timeout=4 * POLL_DT,
                               default_latency=POLL_DT, clock=clk)
+    shed_before = eng.stats.shed
     queries = _mixed_queries(rng, eng, n=int(rng.integers(6, 16)))
     arrivals = np.cumsum(rng.exponential(POLL_DT, len(queries)))
-    deadlines = [float(at) + float(rng.uniform(POLL_DT, 10 * POLL_DT))
-                 if rng.random() < 0.5 else None
-                 for at in arrivals]
+    # deadline mix: none / feasible / already expired at submission (the
+    # expired ones MUST be shed — they grow the shed path's fuzz coverage)
+    deadlines = []
+    for at in arrivals:
+        r = rng.random()
+        if r < 0.4:
+            deadlines.append(None)
+        elif r < 0.8:
+            deadlines.append(float(at) + float(rng.uniform(POLL_DT,
+                                                           10 * POLL_DT)))
+        else:
+            deadlines.append(float(at) - float(rng.uniform(0.1 * POLL_DT,
+                                                           5 * POLL_DT)))
 
     futs = [None] * len(queries)
     done_at = {}
@@ -355,23 +488,39 @@ def test_fuzz_policy_never_starves_and_matches_sync(seed):
                 done_at[j] = clk.t
         assert clk.t <= horizon, "queries starved past the horizon"
 
-    # (1) nothing starves; feasible deadlines met within one poll interval
+    shed = [j for j, f in enumerate(futs)
+            if f.exception() is not None]
+    # (1) nothing starves: every future resolved; every query that
+    # resolved WITH a result under a deadline met it within one tick
     for j, dl in enumerate(deadlines):
-        if dl is not None:
+        if dl is not None and j not in shed:
             assert done_at[j] <= dl + POLL_DT + 1e-9, (
                 f"query {j} finished {done_at[j]:.4f}, "
                 f"deadline {dl:.4f} + tick {POLL_DT}")
-    # (2) flushes respect max_batch and are single-group
+    # (2) sheds are genuine and fully accounted: only deadline-carrying
+    # queries shed, expired-at-submit deadlines always shed, exceptions
+    # are DeadlineExceeded, and the counters agree with the futures
+    for j in shed:
+        assert deadlines[j] is not None
+        assert isinstance(futs[j].exception(), DeadlineExceeded)
+    for j, (at, dl) in enumerate(zip(arrivals, deadlines)):
+        if dl is not None and dl < float(at):
+            assert j in shed, f"expired-at-submit query {j} not shed"
+    assert eng.stats.shed - shed_before == len(shed)
+    assert sum(ev.n_shed for ev in aq.flush_log) == len(shed)
+    # (3) flushes respect max_batch and are single-group
     for ev in aq.flush_log:
         assert ev.n_corpora <= eng.max_batch
         assert ev.kind in ("word_count", "sort", "term_vector",
                            "inverted_index", "ranked_inverted_index",
                            "sequence_count")
         assert (ev.l is None) == (ev.kind != "sequence_count")
-    # (3) bit-identical to the one-shot sync run of the same query list
+    # (4) every non-shed result is bit-identical to the one-shot sync run
+    # of the same query list (differential equivalence under shedding)
     want = eng.run(queries)
-    for f, w in zip(futs, want):
-        _assert_same(f.result(), w)
+    for j, (f, w) in enumerate(zip(futs, want)):
+        if j not in shed:
+            _assert_same(f.result(), w)
 
 
 @settings(max_examples=3, deadline=None)
