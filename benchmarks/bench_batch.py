@@ -9,7 +9,19 @@ modes fully warmed/compiled before measurement).
 
 Also emits ``batch/traversal/{segment_sum,ell,ell_speedup}``: the batched
 frontier rounds on the COO segment_sum path vs the dense ELL edge plan
-(scatter-free gather form — core/batch.py DESIGN note).
+(scatter-free gather form — core/batch.py DESIGN note); and
+``batch/traversal/{fused,fused_speedup}``: the fused multi-round traversal
+(kernels/propagate_fused.py — the whole frontier loop in ONE dispatch)
+against the per-round while_loop ELL path it replaces.  The fused floor
+(docs/benchmarks.md) binds on this row: one dispatch must never lose to
+num_levels dispatches.
+
+``autotune/*`` rows run the kernels/autotune.py block-size sweeps on the
+pack's real ELL plan (the jnp reference form is itself a candidate, so the
+sweep also answers ref-vs-kernel routing), record each kind's winner and
+its winner-vs-default ratio, seed an ``ell_vs_seg`` routing entry from the
+segment_sum/ELL timings above, and persist the tuned table to
+AUTOTUNE_cache.json (CI uploads it as an artifact).
 
 ``search/<scheme>/{sequential,batched,speedup}`` rows time compressed
 BM25/TF-IDF top-k ranking (repro/search): one jitted per-corpus scoring
@@ -34,6 +46,7 @@ from __future__ import annotations
 from typing import List
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (GrammarArrays, GrammarBatch, batched_term_vector,
@@ -67,6 +80,61 @@ def make_ragged_corpora(n: int, seed: int = 7) -> List[GrammarArrays]:
         g, nf = compress_files(files, vocab)
         gas.append(flatten(g, vocab, nf))
     return gas
+
+
+def _autotune_rows(gb: GrammarBatch, n: int, t_seg: float, t_ell: float,
+                   smoke: bool) -> dict:
+    """Run the block-size sweeps on the pack's real ELL plan and emit
+    ``autotune/<kind>/{winner,winner_speedup}`` rows.
+
+    Candidate grids shrink at smoke scale (every candidate is a fresh
+    compile; the smoke lane only checks the harness executes end to end).
+    The ``ell_vs_seg`` routing entry is seeded from the segment_sum/ELL
+    timings the traversal section already measured — both engine paths
+    actually timed on this machine — and the whole table persists to the
+    cache file (AUTOTUNE_cache.json unless REPRO_AUTOTUNE_CACHE points
+    elsewhere)."""
+    from repro.kernels import autotune
+
+    src, freq, _, num_levels = gb.ell_plan()
+    in_deg = gb.in_deg
+    w0 = jnp.zeros(in_deg.shape, jnp.float32).at[:, 0].set(1.0)
+    active0 = (in_deg == 0).astype(jnp.float32)
+    Wv = jnp.zeros((*in_deg.shape, gb.F_pad),
+                   jnp.float32).at[:, 0, 0].set(1.0)
+    if smoke:
+        kw = dict(repeat=1, warmup=0)
+        entries = {
+            "ell_batched": autotune.tune_ell_batched(
+                w0, active0, src, freq, brs=(128,), wcs=(1 << 16,), **kw),
+            "ell_fused": autotune.tune_ell_fused(
+                w0, in_deg.astype(jnp.float32), src, freq, num_levels,
+                brs=(128,), **kw),
+            "ell_vector": autotune.tune_ell_vector(
+                Wv, active0, src, freq, brs=(32,), fcs=(64,), **kw),
+        }
+    else:
+        entries = {
+            "ell_batched": autotune.tune_ell_batched(w0, active0, src, freq),
+            "ell_fused": autotune.tune_ell_fused(
+                w0, in_deg.astype(jnp.float32), src, freq, num_levels),
+            "ell_vector": autotune.tune_ell_vector(Wv, active0, src, freq),
+        }
+    autotune.put_entry(
+        "ell_vs_seg",
+        autotune.shape_bucket(n, gb.R_pad, gb.ell_plan_width()),
+        {"use_ref": bool(t_ell > t_seg), "us": min(t_seg, t_ell) * 1e6,
+         "default_us": t_seg * 1e6})
+    cache = autotune.save_table()
+    out = {"cache": cache, "kinds": {}}
+    for kind, e in entries.items():
+        ratio = e["default_us"] / max(e["us"], 1e-9)
+        emit(f"autotune/{kind}/winner", e["us"] / 1e6, e["winner"])
+        emit(f"autotune/{kind}/winner_speedup", 0.0, f"{ratio:.2f}x")
+        out["kinds"][kind] = {
+            "winner": e["winner"], "winner_us": e["us"],
+            "default_us": e["default_us"], "winner_vs_default": ratio}
+    return out
 
 
 def run(smoke: bool = False) -> dict:
@@ -108,15 +176,29 @@ def run(smoke: bool = False) -> dict:
         jax.block_until_ready(
             batched_top_down_weights(gb, method="frontier_ell"))
 
+    def trav_fused():
+        jax.block_until_ready(
+            batched_top_down_weights(gb, method="frontier_fused"))
+
     t_seg = timeit(trav_seg, repeat=3, warmup=1)
     t_ell = timeit(trav_ell, repeat=3, warmup=1)
+    t_fused = timeit(trav_fused, repeat=5, warmup=2)
     ell_speedup = t_seg / max(t_ell, 1e-12)
+    fused_speedup = t_ell / max(t_fused, 1e-12)
     emit("batch/traversal/segment_sum", t_seg, f"n={n}")
     emit("batch/traversal/ell", t_ell, f"n={n}")
     emit("batch/traversal/ell_speedup", 0.0, f"{ell_speedup:.2f}x")
+    emit("batch/traversal/fused", t_fused, f"n={n}")
+    emit("batch/traversal/fused_speedup", 0.0, f"{fused_speedup:.2f}x")
     out["ell_vs_segment_sum"] = {
         "segment_sum_us": t_seg * 1e6, "ell_us": t_ell * 1e6,
         "speedup": ell_speedup}
+    out["traversal_fused"] = {
+        "ell_us": t_ell * 1e6, "fused_us": t_fused * 1e6,
+        "speedup": fused_speedup,
+        "vs_segment_sum": t_seg / max(t_fused, 1e-12)}
+
+    out["autotune"] = _autotune_rows(gb, n, t_seg, t_ell, smoke)
 
     # ----- compressed search: batched vs per-corpus sequential ranking ---
     # sequential = the pre-batching retrieval story: one jitted scoring

@@ -57,6 +57,25 @@ def check_floors(data: dict, smoke: bool = False) -> List[str]:
         need(row["speedup"] >= floor,
              f"batch/{app}/speedup {row['speedup']:.2f}x < {floor}x")
 
+    # fused multi-round traversal >= the per-round while_loop ELL path it
+    # replaces: ONE dispatch must never lose to num_levels dispatches.
+    # Smoke scale gets noise headroom (tiny packs, shared CI boxes); the
+    # 1x floor binds in the full sweep.
+    tf = data.get("traversal_fused")
+    if tf is not None:
+        floor = 0.9 if smoke else 1.0
+        need(tf["speedup"] >= floor,
+             f"batch/traversal/fused_speedup {tf['speedup']:.2f}x "
+             f"< {floor}x vs per-round while_loop")
+
+    # autotune winners can never lose to the shipped defaults — "default"
+    # is itself a candidate in every sweep, so a ratio below ~1 means the
+    # sweep harness is broken, not that the machine is slow
+    for kind, row in data.get("autotune", {}).get("kinds", {}).items():
+        need(row["winner_vs_default"] >= 0.99,
+             f"autotune/{kind}/winner_speedup "
+             f"{row['winner_vs_default']:.2f}x < 1x vs default")
+
     # search batched >= 2x sequential (both scales clear this easily)
     for scheme, row in data.get("search", {}).get("schemes", {}).items():
         need(row["speedup"] >= 2.0,

@@ -478,6 +478,87 @@ _leveled_weights_batched = jax.jit(_leveled_weights_impl,
                                    static_argnames=("slices", "R"))
 
 
+# Methods that run on the dense ELL plan, and the segment_sum bases an
+# ineligible request degrades to.  ``resolve_traversal_method`` is the ONE
+# place the gates live: the engines dispatch on its answer and the serving
+# layer compares requested-vs-resolved to count downgrades
+# (ServerStats.method_fallbacks) instead of remapping silently.
+ELL_METHODS = ("frontier_ell", "leveled_ell", "frontier_fused")
+SEGMENT_SUM_BASES = {"frontier_ell": "frontier", "frontier_fused": "frontier",
+                     "leveled_ell": "leveled"}
+# Kinds whose traversal carries the [R, F] per-file payload (the rest use
+# the scalar weight vector).  Search kinds feed from batched_term_vector,
+# so they are per-file too (serving/analytics_server.py extends this set).
+PER_FILE_KINDS = ("term_vector", "inverted_index", "ranked_inverted_index")
+
+
+def resolve_traversal_method(method: str, *, n: int, rows: int, k: int,
+                             edges: int, shards: int = 1,
+                             per_file: bool = False, f: int = 1) -> str:
+    """Resolve a requested traversal method against the pack's shape gates.
+
+    Pure over dimensions (n/rows/k are the pack's N, R_pad and ELL plan
+    width; ``f`` is F_pad for per-file traversals) so the serving layer can
+    predict the engine's routing without building a plan.  Rules:
+
+    * ``auto`` — occupancy dispatch (kernels.ops.ell_batched_use_ref, per
+      shard), then the fused path when the scalar state fits VMEM;
+    * explicit ELL methods degrade to their segment_sum base when the dense
+      plan itself is ineligible (width / absolute-entry safety valves, and
+      the vector-payload budget for per-file traversals);
+    * ``frontier_fused`` degrades to ``frontier_ell`` (still an ELL base —
+      NOT a fallback) when the fused state exceeds VMEM residency or the
+      traversal is per-file (the fused kernel is scalar-payload).
+    """
+    from repro.kernels import ops as kops
+
+    if method == "auto":
+        if kops.ell_batched_use_ref(edges, n, rows, k, shards=shards):
+            return "frontier"
+        if per_file:
+            if not kops.ell_vector_plan_ok(n, rows, k, f):
+                return "frontier"
+            return "frontier_ell"
+        if kops.ell_fused_use_kernel(rows):
+            return "frontier_fused"
+        return "frontier_ell"
+    if method in ELL_METHODS:
+        # safety valves even when ELL is requested explicitly: a skewed
+        # grammar (hub rule with huge in-degree) or a huge sparse one
+        # (many rules x a moderate hub's K) would make the dense plan
+        # O(N * R_pad * K) memory — fall back to the segment_sum base
+        # (identical results).
+        if (k > kops.ELL_BATCH_MAX_WIDTH
+                or n * rows * k > kops.ELL_PLAN_MAX_ENTRIES):
+            return SEGMENT_SUM_BASES[method]
+        if per_file:
+            if not kops.ell_vector_plan_ok(n, rows, k, f):
+                return SEGMENT_SUM_BASES[method]
+            if method == "frontier_fused":
+                return "frontier_ell"
+        elif method == "frontier_fused":
+            if not kops.ell_fused_use_kernel(rows):
+                return "frontier_ell"
+    return method
+
+
+def is_segment_sum_fallback(requested: str, resolved: str) -> bool:
+    """True when an explicitly-requested ELL-family method landed on a
+    segment_sum base (the downgrade ServerStats.method_fallbacks counts)."""
+    return requested in ELL_METHODS and resolved in ("frontier", "leveled")
+
+
+def resolve_batch_method(gb: "GrammarBatch", method: str,
+                         per_file: bool = False) -> str:
+    """`resolve_traversal_method` with the dims read off a built pack."""
+    if method != "auto" and method not in ELL_METHODS:
+        return method
+    return resolve_traversal_method(
+        method, n=gb.n, rows=gb.R_pad, k=gb.ell_plan_width(),
+        edges=gb.total_edges, shards=gb.shards, per_file=per_file,
+        f=gb.F_pad)
+
+
 def _frontier_ell_impl(ell_src, ell_freq, in_deg):
     """Masked frontier rounds over the dense ELL plan: every round is ONE
     fused gather + row-sum (no scatter), with delta and the seen-counter
@@ -528,37 +609,44 @@ _leveled_weights_batched_ell = jax.jit(_leveled_ell_impl,
                                        static_argnames=("num_levels",))
 
 
+def _frontier_fused_impl(ell_src, ell_freq, in_deg, num_levels):
+    """The whole frontier loop in ONE dispatch (kernels.ops dispatches to
+    the fused Pallas kernel on TPU / the jitted fori_loop form on CPU).
+
+    ``num_levels`` — the pack's max DAG depth — is the exact round count
+    the while_loop form executes (level-L rules activate in round L+1), so
+    the static bound loses nothing; corpora shallower than the deepest one
+    converge early and their remaining rounds are exact no-ops.  This
+    replaces the per-round while_loop -> kernel -> XLA round-trip
+    ("the structural tax"): one launch instead of num_levels launches.
+    """
+    from repro.kernels import ops as kops
+
+    N, R = in_deg.shape
+    w0 = jnp.zeros((N, R), jnp.float32).at[:, 0].set(1.0)
+    return kops.ell_frontier_fused(w0, in_deg.astype(jnp.float32),
+                                   ell_src, ell_freq, num_levels)
+
+
+_frontier_fused_batched = jax.jit(_frontier_fused_impl,
+                                  static_argnames=("num_levels",))
+
+
 def batched_top_down_weights(gb: GrammarBatch,
                              method: str = "frontier") -> jnp.ndarray:
     """weights[i, r] == occurrences of corpus i's rule r. Shape [N, R_pad].
 
     Methods: ``frontier`` / ``leveled`` (COO + segment_sum),
-    ``frontier_ell`` / ``leveled_ell`` (dense ELL plan, scatter-free), and
-    ``auto`` (occupancy dispatch via kernels.ops.ell_batched_use_ref).
-    Sharded packs (``gb.mesh``) run the same methods through
-    ``shard_map`` — each device traverses its own corpus rows (module
-    DESIGN note), results bit-identical to the unsharded program.
+    ``frontier_ell`` / ``leveled_ell`` (dense ELL plan, scatter-free,
+    per-round), ``frontier_fused`` (the ELL frontier loop in ONE dispatch —
+    kernels/propagate_fused.py), and ``auto`` (occupancy dispatch via
+    ``resolve_traversal_method``: ELL when the plan is dense enough, fused
+    when the state fits VMEM).  Sharded packs (``gb.mesh``) run the same
+    methods through ``shard_map`` — each device traverses its own corpus
+    rows (module DESIGN note), results bit-identical to the unsharded
+    program.
     """
-    if method == "auto":
-        from repro.kernels import ops as kops
-        # occupancy is per shard: a sharded pack's launch covers N/D rows
-        # per device, so the edge/row counts the predicate weighs are the
-        # per-shard ones
-        method = ("frontier" if kops.ell_batched_use_ref(
-            gb.total_edges, gb.n, gb.R_pad, gb.ell_plan_width(),
-            shards=gb.shards)
-            else "frontier_ell")
-    if method in ("frontier_ell", "leveled_ell"):
-        from repro.kernels import ops as kops
-        K = gb.ell_plan_width()
-        if (K > kops.ELL_BATCH_MAX_WIDTH
-                or gb.n * gb.R_pad * K > kops.ELL_PLAN_MAX_ENTRIES):
-            # safety valve even when ELL is requested explicitly: a skewed
-            # grammar (hub rule with huge in-degree) or a huge sparse one
-            # (many rules x a moderate hub's K) would make the dense plan
-            # O(N * R_pad * K) memory — fall back to the segment_sum base
-            # (identical results).
-            method = "frontier" if method == "frontier_ell" else "leveled"
+    method = resolve_batch_method(gb, method)
     if method in ("frontier", "top_down", "bottom_up"):
         if gb.mesh is not None:
             return _sharded_program(_frontier_weights_impl, gb.mesh,
@@ -589,6 +677,14 @@ def batched_top_down_weights(gb: GrammarBatch,
                 _leveled_ell_impl, gb.mesh, (3, 3, 2), 2,
                 static=(("num_levels", num_levels),))(src, freq, level)
         return _leveled_weights_batched_ell(src, freq, level, num_levels)
+    if method == "frontier_fused":
+        src, freq, _, num_levels = gb.ell_plan()
+        if gb.mesh is not None:
+            return _sharded_program(
+                _frontier_fused_impl, gb.mesh, (3, 3, 2), 2,
+                static=(("num_levels", num_levels),))(src, freq, gb.in_deg)
+        return _frontier_fused_batched(src, freq, gb.in_deg,
+                                       num_levels=num_levels)
     raise ValueError(f"unknown batched traversal method {method!r}")
 
 
@@ -653,18 +749,82 @@ _per_file_leveled_batched = jax.jit(_per_file_leveled_impl,
                                     static_argnames=("slices", "R", "F"))
 
 
+def _per_file_frontier_ell_impl(ell_src, ell_freq, in_deg, root_seen,
+                                fedge_child, fedge_file, fedge_freq, F):
+    """Per-file frontier rounds over the dense ELL plan with the VECTOR
+    payload round (kernels.ops.ell_propagate_vector).  Root-edge exclusion
+    is structural: the root has in_deg == 0 so it enters ``ever`` at init
+    and its mask entry is never 1 — plan entries with src == 0 contribute
+    nothing, exactly the ``ep != 0`` gate of the COO form (root edges are
+    consumed by the per-file init and pre-counted in ``root_seen``)."""
+    from repro.kernels import ops as kops
+
+    R = in_deg.shape[1]
+
+    def cond(state):
+        _, _, mask, _ = state
+        return jnp.any(mask)
+
+    def body(state):
+        W, cur_in, mask, ever = state
+        delta, seen = kops.ell_propagate_vector(
+            W, mask.astype(jnp.float32), ell_src, ell_freq)
+        W = W + delta
+        cur_in = cur_in + seen.astype(jnp.int32)
+        new_ready = (cur_in == in_deg) & (~ever)
+        return W, cur_in, new_ready, ever | new_ready
+
+    W0 = jax.vmap(
+        lambda fc, ff, fq: jnp.zeros((R, F), jnp.float32).at[fc, ff].add(fq)
+    )(fedge_child, fedge_file, fedge_freq.astype(jnp.float32))
+    mask0 = (root_seen == in_deg) & (in_deg > 0)
+    state = (W0, root_seen, mask0, mask0 | (in_deg == 0))
+    W, _, _, _ = jax.lax.while_loop(cond, body, state)
+    return W
+
+
+_per_file_ell_batched = jax.jit(_per_file_frontier_ell_impl,
+                                static_argnames=("F",))
+
+
+def _per_file_leveled_ell_impl(ell_src, ell_freq, level, fedge_child,
+                               fedge_file, fedge_freq, num_levels, F):
+    """Leveled per-file traversal over the dense ELL plan: level lv's
+    vector round activates exactly the parents at that level.  The root
+    (rule 0, level 0) is masked out — its edges are consumed by the
+    per-file init, like the COO form's ``parent != 0`` gate."""
+    from repro.kernels import ops as kops
+
+    R = level.shape[1]
+    W = jax.vmap(
+        lambda fc, ff, fq: jnp.zeros((R, F), jnp.float32).at[fc, ff].add(fq)
+    )(fedge_child, fedge_file, fedge_freq.astype(jnp.float32))
+    nonroot = (jnp.arange(R) > 0)[None, :]
+    for lv in range(num_levels):
+        active = ((level == lv) & nonroot).astype(jnp.float32)
+        delta, _ = kops.ell_propagate_vector(W, active, ell_src, ell_freq)
+        W = W + delta
+    return W
+
+
+_per_file_leveled_ell_batched = jax.jit(_per_file_leveled_ell_impl,
+                                        static_argnames=("num_levels", "F"))
+
+
 def batched_per_file_weights(gb: GrammarBatch,
                              method: str = "frontier") -> jnp.ndarray:
     """Wf[i, r, f] == occurrences of rule r inside file f of corpus i.
 
-    The ELL methods map to their segment_sum bases here: the per-file
-    payload is a [R, F] vector per rule and the ELL kernels are scalar
-    (see module DESIGN note).  Sharded packs run through ``shard_map``
-    like the scalar traversals.
+    The ELL methods run the vector-payload [R, F] rounds
+    (kernels/propagate_vector.py) over the same dense edge plan as the
+    scalar traversals — no more silent remap to the segment_sum bases
+    (``resolve_batch_method`` still degrades ineligible plans, and the
+    serving layer counts those downgrades).  ``frontier_fused`` runs its
+    per-round ELL base here (the fused kernel is scalar-payload).  Sharded
+    packs run through ``shard_map`` like the scalar traversals.
     """
-    method = {"frontier_ell": "frontier", "leveled_ell": "leveled"}.get(
-        method, method)
-    if method in ("frontier", "auto", "top_down", "bottom_up"):
+    method = resolve_batch_method(gb, method, per_file=True)
+    if method in ("frontier", "top_down", "bottom_up"):
         if gb.mesh is not None:
             return _sharded_program(
                 _per_file_frontier_impl, gb.mesh,
@@ -688,6 +848,29 @@ def batched_per_file_weights(gb: GrammarBatch,
         return _per_file_leveled_batched(
             gb.lv_parent, gb.lv_child, gb.lv_freq, gb.fedge_child,
             gb.fedge_file, gb.fedge_freq, gb.lv_slices, gb.R_pad, gb.F_pad)
+    if method == "frontier_ell":
+        src, freq, _, _ = gb.ell_plan()
+        if gb.mesh is not None:
+            return _sharded_program(
+                _per_file_frontier_ell_impl, gb.mesh,
+                (3, 3, 2, 2, 2, 2, 2), 3, static=(("F", gb.F_pad),))(
+                src, freq, gb.in_deg, gb.root_seen, gb.fedge_child,
+                gb.fedge_file, gb.fedge_freq)
+        return _per_file_ell_batched(
+            src, freq, gb.in_deg, gb.root_seen, gb.fedge_child,
+            gb.fedge_file, gb.fedge_freq, gb.F_pad)
+    if method == "leveled_ell":
+        src, freq, level, num_levels = gb.ell_plan()
+        if gb.mesh is not None:
+            return _sharded_program(
+                _per_file_leveled_ell_impl, gb.mesh,
+                (3, 3, 2, 2, 2, 2), 3,
+                static=(("num_levels", num_levels), ("F", gb.F_pad)))(
+                src, freq, level, gb.fedge_child, gb.fedge_file,
+                gb.fedge_freq)
+        return _per_file_leveled_ell_batched(
+            src, freq, level, gb.fedge_child, gb.fedge_file, gb.fedge_freq,
+            num_levels, gb.F_pad)
     raise ValueError(f"unknown batched traversal method {method!r}")
 
 

@@ -85,7 +85,28 @@ def top_down_weights(ga: GrammarArrays, method: str = "frontier") -> jnp.ndarray
         return _top_down_leveled(ga)
     if method == "frontier_ell":
         return _top_down_frontier_ell(ga)
+    if method == "frontier_fused":
+        return _top_down_frontier_fused(ga)
     raise ValueError(f"unknown traversal method {method!r}")
+
+
+def resolve_single_method(ga: GrammarArrays, method: str,
+                          per_file: bool = False) -> str:
+    """Predict the single-corpus engine's routing for ``method`` — the N=1
+    analogue of :func:`repro.core.batch.resolve_batch_method`, so the
+    serving layer can count ELL→segment_sum downgrades on the per-corpus
+    path too.  Mirrors the actual dispatch: scalar ``leveled_ell`` always
+    runs the N=1 leveled replay (see :func:`top_down_weights`), everything
+    else goes through the shared shape gates."""
+    if method not in ("frontier_ell", "leveled_ell", "frontier_fused"):
+        return method
+    if not per_file and method == "leveled_ell":
+        return "leveled"
+    from .batch import resolve_traversal_method
+    K = _pow2_bucket(int(ga.in_deg.max(initial=0)))
+    return resolve_traversal_method(
+        method, n=1, rows=ga.num_rules, k=K, edges=len(ga.edge_parent),
+        per_file=per_file, f=ga.num_files)
 
 
 def _top_down_frontier_ell(ga: GrammarArrays) -> jnp.ndarray:
@@ -111,6 +132,14 @@ def _top_down_frontier_ell(ga: GrammarArrays) -> jnp.ndarray:
             jnp.asarray(ga.edge_freq), jnp.asarray(ga.in_deg), ga.num_rules)
         return w
 
+    srcj, freqj, in_deg = _ell_plan_single(ga)
+    return _frontier_weights_batched_ell(srcj, freqj, in_deg)[0]
+
+
+def _ell_plan_single(ga: GrammarArrays):
+    """Memoized N=1 dense ELL plan (src, freq, in_deg), shared by the
+    per-round and fused single-corpus engines (same eviction discipline as
+    the other _ENGINE_CACHE entries)."""
     key = ("ell", id(ga))
     entry = _ENGINE_CACHE.get(key)
     if entry is None:
@@ -119,11 +148,35 @@ def _top_down_frontier_ell(ga: GrammarArrays) -> jnp.ndarray:
                  jnp.asarray(freq)[None],
                  jnp.asarray(ga.in_deg)[None])     # [1, R]
         _ENGINE_CACHE[key] = entry
-        # evict when ga dies: id() values are recycled, and a same-id key
-        # must never serve another grammar's plan
         weakref.finalize(ga, _ENGINE_CACHE.pop, key, None)
-    srcj, freqj, in_deg = entry
-    return _frontier_weights_batched_ell(srcj, freqj, in_deg)[0]
+    return entry
+
+
+def _top_down_frontier_fused(ga: GrammarArrays) -> jnp.ndarray:
+    """The whole frontier loop in ONE dispatch over the N=1 ELL plan.
+
+    ``ga.num_levels`` is the exact round count the while_loop form needs
+    (level-L rules activate in round L+1), so the fused form loses nothing
+    to its static bound.  Gates mirror the batched engine: plans too wide /
+    too big for the dense layout take the COO frontier; rule counts beyond
+    the fused kernel's VMEM state residency take the per-round ELL path.
+    """
+    from repro.kernels import ops as kops
+
+    K = _pow2_bucket(int(ga.in_deg.max(initial=0)))
+    if (K > kops.ELL_BATCH_MAX_WIDTH
+            or ga.num_rules * K > kops.ELL_PLAN_MAX_ENTRIES):
+        w, _ = _top_down_frontier(
+            jnp.asarray(ga.edge_parent), jnp.asarray(ga.edge_child),
+            jnp.asarray(ga.edge_freq), jnp.asarray(ga.in_deg), ga.num_rules)
+        return w
+    if not kops.ell_fused_use_kernel(ga.num_rules):
+        return _top_down_frontier_ell(ga)
+    from .batch import _frontier_fused_batched
+
+    srcj, freqj, in_deg = _ell_plan_single(ga)
+    return _frontier_fused_batched(srcj, freqj, in_deg,
+                                   num_levels=ga.num_levels)[0]
 
 
 _ENGINE_CACHE: Dict = {}
@@ -170,11 +223,21 @@ def per_file_weights(ga: GrammarArrays, method: str = "frontier") -> jnp.ndarray
     schedule is *identical* to the global traversal — topology does not
     depend on the propagated payload — so the paper's Algorithm 1 carries
     over with a batched weight vector.
+
+    The ELL methods run the vector-payload [R, F] rounds over the N=1
+    dense edge plan (kernels/propagate_vector.py) — the historical silent
+    remap to the segment_sum bases is gone; only shape-gate-ineligible
+    plans degrade (same valves as the batched engine).  ``frontier_fused``
+    runs its per-round ELL base (the fused kernel is scalar-payload).
     """
-    # ELL methods keep their segment_sum bases here: the payload is a
-    # [R, F] vector per rule and the ELL kernels are scalar.
-    method = {"frontier_ell": "frontier", "leveled_ell": "leveled"}.get(
-        method, method)
+    if method in ("frontier_ell", "leveled_ell", "frontier_fused"):
+        from .batch import resolve_traversal_method
+        K = _pow2_bucket(int(ga.in_deg.max(initial=0)))
+        method = resolve_traversal_method(
+            method, n=1, rows=ga.num_rules, k=K, edges=len(ga.edge_parent),
+            per_file=True, f=ga.num_files)
+    if method in ("frontier_ell", "leveled_ell"):
+        return _per_file_weights_ell(ga, method)
     R, F = ga.num_rules, ga.num_files
     ep = jnp.asarray(ga.edge_parent)
     ec = jnp.asarray(ga.edge_child)
@@ -234,6 +297,37 @@ def per_file_weights(ga: GrammarArrays, method: str = "frontier") -> jnp.ndarray
         return W
 
     return run(W0)
+
+
+def _per_file_weights_ell(ga: GrammarArrays, method: str) -> jnp.ndarray:
+    """Per-file traversal over the N=1 dense ELL plan with vector-payload
+    rounds — the single-corpus case of core/batch.py's per-file ELL
+    engines (shared jitted loops + compile cache).  Plan arrays are
+    memoized per grammar with the same id-keyed weakref eviction as the
+    scalar plan."""
+    from .batch import _per_file_ell_batched, _per_file_leveled_ell_batched
+
+    srcj, freqj, in_deg = _ell_plan_single(ga)
+    key = ("ell_pf", id(ga))
+    entry = _ENGINE_CACHE.get(key)
+    if entry is None:
+        root_seen = np.bincount(ga.edge_child[ga.edge_parent == 0],
+                                minlength=ga.num_rules).astype(np.int32)
+        entry = (jnp.asarray(root_seen)[None],     # [1, R]
+                 jnp.asarray(ga.fedge_child)[None],
+                 jnp.asarray(ga.fedge_file)[None],
+                 jnp.asarray(ga.fedge_freq.astype(np.float32))[None],
+                 jnp.asarray(ga.level)[None])      # [1, R]
+        _ENGINE_CACHE[key] = entry
+        # evict when ga dies: id() values are recycled, and a same-id key
+        # must never serve another grammar's plan
+        weakref.finalize(ga, _ENGINE_CACHE.pop, key, None)
+    root_seen, fc, ff, fq, level = entry
+    if method == "frontier_ell":
+        return _per_file_ell_batched(srcj, freqj, in_deg, root_seen,
+                                     fc, ff, fq, ga.num_files)[0]
+    return _per_file_leveled_ell_batched(srcj, freqj, level, fc, ff, fq,
+                                         ga.num_levels, ga.num_files)[0]
 
 
 # ----------------------------------------------------------------------- #

@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ._common import resolve_interpret
+
 
 DEFAULT_TN = 512   # input tile (multiple of 128 for the MXU contraction dim)
 DEFAULT_BV = 512   # bin block   (multiple of 128, lane dim)
@@ -48,14 +50,21 @@ def _kernel(ids_ref, vals_ref, out_ref, *, bv: int):
                             preferred_element_type=jnp.float32)
 
 
-@functools.partial(jax.jit, static_argnames=("nbins", "tn", "bv", "interpret"))
 def weighted_bincount_pallas(ids: jnp.ndarray, vals: jnp.ndarray, nbins: int,
                              tn: int = DEFAULT_TN, bv: int = DEFAULT_BV,
-                             interpret: bool = True) -> jnp.ndarray:
+                             interpret: bool | None = None) -> jnp.ndarray:
     """out[b] = sum(vals[ids == b]) for b in [0, nbins).
 
     ids outside [0, nbins) are ignored (ops.py uses id == -1 as padding).
+    ``interpret=None`` auto-resolves outside jit (_common.resolve_interpret).
     """
+    return _weighted_bincount_jit(ids, vals, nbins, tn, bv,
+                                  resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("nbins", "tn", "bv", "interpret"))
+def _weighted_bincount_jit(ids, vals, nbins: int, tn: int, bv: int,
+                           interpret: bool) -> jnp.ndarray:
     n = ids.shape[0]
     n_pad = (-n) % tn
     ids_p = jnp.pad(ids.astype(jnp.int32), (0, n_pad), constant_values=-1)

@@ -30,10 +30,23 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from . import ref
+from . import autotune, ref
+from ._common import (DEFAULT_BR, DEFAULT_WC, force_interpret,
+                      on_tpu as _on_tpu, reset_backend_cache,
+                      resolve_interpret as _interp)
 from .bincount import weighted_bincount_pallas
 from .propagate import ell_row_sums_pallas
 from .propagate_batched import ell_propagate_batched_pallas
+from .propagate_fused import ell_frontier_fused_pallas
+from .propagate_vector import ell_propagate_vector_pallas
+
+__all__ = [
+    "weighted_bincount", "weighted_bincount_batched", "masked_top_k",
+    "ell_row_sums", "ell_propagate_batched", "ell_propagate_vector",
+    "ell_frontier_fused", "bincount_use_ref", "bincount_batch_rows",
+    "ell_use_ref", "ell_batched_use_ref", "ell_fused_use_kernel",
+    "ell_vector_plan_ok", "reset_backend_cache", "force_interpret",
+]
 
 # Below these sizes a kernel launch is pure overhead.
 BINCOUNT_MIN_N = 64
@@ -52,6 +65,10 @@ ELL_BATCH_MIN_FILL = 1.0 / 256.0
 # grammar with one moderate hub rule passes the width gate yet would
 # allocate an O(R * K) plan far beyond its COO size.
 ELL_PLAN_MAX_ENTRIES = 1 << 27
+# The fused multi-round kernel keeps the WHOLE frontier state (six [R_pad]
+# float32 vectors) VMEM-resident per corpus — ~24 B/rule.  Above this rule
+# count the engines fall back to the per-round streaming path.
+ELL_FUSED_MAX_RULES = 1 << 18
 
 
 def bincount_use_ref(n: int, nbins: int) -> bool:
@@ -90,8 +107,16 @@ def ell_batched_use_ref(num_edges: int, n: int, rows: int, k: int,
     >256x the real edge work.  ``shards`` > 1 evaluates the launch-overhead
     gate per device — a corpus-sharded pack (core/batch.py DESIGN note)
     launches one program per shard over N/shards rows, so that is the width
-    the launch must amortize.  Fill is a ratio and shard-invariant."""
+    the launch must amortize.  Fill is a ratio and shard-invariant.
+
+    A tuned table entry (kernels/autotune.py, kind ``ell_vs_seg`` — both
+    engine paths actually timed on this machine at this shape bucket)
+    overrides all of the static heuristics."""
     shards = max(int(shards), 1)
+    tuned = autotune.tuned_use_ref(
+        "ell_vs_seg", autotune.shape_bucket(max(n // shards, 1), rows, k))
+    if tuned is not None:
+        return tuned
     if (n // shards) * rows < ELL_BATCH_MIN_ROWS:
         return True
     if k > ELL_BATCH_MAX_WIDTH:
@@ -100,32 +125,35 @@ def ell_batched_use_ref(num_edges: int, n: int, rows: int, k: int,
     return fill < ELL_BATCH_MIN_FILL
 
 
-_BACKEND_CACHE: dict = {}
+def ell_fused_use_kernel(rows: int) -> bool:
+    """True when the fused multi-round traversal may run device-resident:
+    the whole frontier state must fit VMEM (see ELL_FUSED_MAX_RULES).
+    Engines that get False fall back to the per-round frontier path —
+    identical results, per-round dispatch cost."""
+    return rows <= ELL_FUSED_MAX_RULES
 
 
-def _on_tpu() -> bool:
-    """Cached backend probe.  NOT an lru_cache: tests monkeypatch the jax
-    backend, and a process-lifetime cache would leak the first answer
-    across them — reset_backend_cache() makes the memo revocable."""
-    if "on_tpu" not in _BACKEND_CACHE:
-        try:
-            _BACKEND_CACHE["on_tpu"] = jax.devices()[0].platform == "tpu"
-        except Exception:  # pragma: no cover
-            _BACKEND_CACHE["on_tpu"] = False
-    return _BACKEND_CACHE["on_tpu"]
+def ell_vector_plan_ok(n: int, rows: int, k: int, f: int) -> bool:
+    """True when the vector-payload [N, rows, K] x [R, F] round fits the
+    dense-plan budget (the gather materializes N*rows*K*F contributions)."""
+    return n * rows * k * max(f, 1) <= ELL_PLAN_MAX_ENTRIES
 
 
-def reset_backend_cache() -> None:
-    """Drop the memoized backend probe (call after changing jax backends).
+def _use_jnp_ref(interpret) -> bool:
+    """True when production dispatch should take the jnp reference form:
+    CPU with auto routing (interpret-mode kernel emulation is pure
+    overhead) — unless the forced-interpret CI lane is on, which exists
+    precisely to push production traffic through the Pallas code paths."""
+    return interpret is None and not _on_tpu() and not force_interpret()
 
-    Caveat: routing decisions are made at trace time, so programs that are
-    already jit-compiled keep whatever branch they baked in — also call
-    ``jax.clear_caches()`` if compiled routing must change too."""
-    _BACKEND_CACHE.clear()
 
-
-def _interp(interpret) -> bool:
-    return (not _on_tpu()) if interpret is None else bool(interpret)
+def _blocks(kind: str, bucket, defaults: dict) -> dict:
+    """Merge tuned block sizes (autotune table) over the shipped defaults."""
+    merged = dict(defaults)
+    for key, val in autotune.tuned_blocks(kind, bucket).items():
+        if key in merged:
+            merged[key] = val
+    return merged
 
 
 def weighted_bincount(ids: jnp.ndarray, vals: jnp.ndarray, nbins: int,
@@ -232,7 +260,79 @@ def ell_propagate_batched(weights: jnp.ndarray, active: jnp.ndarray,
     if n == 0 or rows == 0 or k == 0:
         z = jnp.zeros((n, rows), jnp.float32)
         return z, z
-    if interpret is None and not _on_tpu():
+    if _use_jnp_ref(interpret):
         return ref.ell_propagate_batched_ref(weights, active, src, freq)
+    blocks = _blocks("ell_batched", autotune.shape_bucket(n, rows, k),
+                     {"br": DEFAULT_BR, "wc": DEFAULT_WC})
     return ell_propagate_batched_pallas(weights, active, src, freq,
-                                        interpret=_interp(interpret))
+                                        interpret=_interp(interpret),
+                                        **blocks)
+
+
+def ell_propagate_vector(W: jnp.ndarray, active: jnp.ndarray,
+                         src: jnp.ndarray, freq: jnp.ndarray,
+                         interpret: bool | None = None):
+    """One vector-payload propagation round over the [N, rows, K] plan.
+
+    W: [N, R, F] per-file payload; returns ``(delta [N, rows, F],
+    seen [N, rows])`` — the per-file traversals' ELL round (see
+    propagate_vector.py).  Routing mirrors ``ell_propagate_batched``: TPU
+    lowers the Pallas kernel, CPU production takes the jnp gather form,
+    interpret=True (or the forced-interpret lane) runs the interpret-mode
+    kernel as the validation oracle.
+    """
+    if src.ndim != 3 or freq.shape != src.shape:
+        raise ValueError(f"expected matching [N, rows, K] plans, got "
+                         f"{src.shape} / {freq.shape}")
+    if W.ndim != 3:
+        raise ValueError(f"expected [N, R, F] payload, got {W.shape}")
+    n, rows, k = src.shape
+    if n == 0 or rows == 0 or k == 0:
+        return (jnp.zeros((n, rows, W.shape[-1]), jnp.float32),
+                jnp.zeros((n, rows), jnp.float32))
+    if _use_jnp_ref(interpret):
+        return ref.ell_propagate_vector_ref(W, active, src, freq)
+    from .propagate_vector import DEFAULT_BRV, DEFAULT_WCV
+    from ._common import DEFAULT_FC
+    blocks = _blocks(
+        "ell_vector", autotune.shape_bucket(n, rows, k, W.shape[-1]),
+        {"br": DEFAULT_BRV, "wc": DEFAULT_WCV, "fc": DEFAULT_FC})
+    return ell_propagate_vector_pallas(W, active, src, freq,
+                                       interpret=_interp(interpret),
+                                       **blocks)
+
+
+def ell_frontier_fused(weights0: jnp.ndarray, in_deg: jnp.ndarray,
+                       src: jnp.ndarray, freq: jnp.ndarray,
+                       max_rounds: int, with_rounds: bool = False,
+                       interpret: bool | None = None):
+    """The WHOLE frontier traversal in one dispatch (see propagate_fused.py).
+
+    weights0/in_deg: [N, R]; src/freq: [N, R, K]; ``max_rounds`` must bound
+    the frontier round count (the DAG's ``num_levels`` is exact).  Returns
+    weights [N, R] — or ``(weights, rounds [N])`` when ``with_rounds``.
+    Callers must pre-gate with ``ell_fused_use_kernel(R)`` (VMEM state
+    residency); routing follows ``ell_propagate_batched``: CPU production
+    runs the jitted fori_loop reference (one dispatch, no per-round
+    convergence test — the same structural-tax win in jnp form), TPU and
+    the interpret lanes run the Pallas kernel.
+    """
+    if src.ndim != 3 or freq.shape != src.shape:
+        raise ValueError(f"expected matching [N, rows, K] plans, got "
+                         f"{src.shape} / {freq.shape}")
+    n, rows, k = src.shape
+    if n == 0 or rows == 0 or k == 0:
+        w = weights0.astype(jnp.float32)
+        return (w, jnp.zeros(n, jnp.int32)) if with_rounds else w
+    if _use_jnp_ref(interpret):
+        return ref.ell_frontier_fused_ref(weights0, in_deg, src, freq,
+                                          max_rounds,
+                                          with_rounds=with_rounds)
+    blocks = _blocks("ell_fused",
+                     autotune.shape_bucket(n, rows, k, max_rounds),
+                     {"br": DEFAULT_BR})
+    w, rounds = ell_frontier_fused_pallas(weights0, in_deg, src, freq,
+                                          max_rounds,
+                                          interpret=_interp(interpret),
+                                          **blocks)
+    return (w, rounds) if with_rounds else w

@@ -31,7 +31,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from ._common import DEFAULT_BR, DEFAULT_WC, round_up_pow2
+from ._common import DEFAULT_BR, DEFAULT_WC, resolve_interpret, round_up_pow2
 
 
 def _kernel(w_ref, src_ref, freq_ref, out_ref, *, wc: int):
@@ -53,17 +53,23 @@ def _kernel(w_ref, src_ref, freq_ref, out_ref, *, wc: int):
     out_ref[...] += (gathered * gated).sum(axis=1, keepdims=True)  # [BR, 1]
 
 
-@functools.partial(jax.jit, static_argnames=("br", "wc", "interpret"))
 def ell_row_sums_pallas(weights: jnp.ndarray, src: jnp.ndarray,
                         freq: jnp.ndarray, br: int = DEFAULT_BR,
                         wc: int = DEFAULT_WC,
-                        interpret: bool = True) -> jnp.ndarray:
+                        interpret: bool | None = None) -> jnp.ndarray:
     """row_sums[r] = sum_k freq[r, k] * weights[src[r, k]].
 
     src/freq: [rows, W] ELL arrays (padding: src=0, freq=0).  ``wc`` is the
     VMEM weight-chunk length; weight vectors of any size are streamed
     through it (small vectors collapse to a single chunk).
+    ``interpret=None`` auto-resolves outside jit (_common.resolve_interpret).
     """
+    return _ell_row_sums_jit(weights, src, freq, br, wc,
+                             resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("br", "wc", "interpret"))
+def _ell_row_sums_jit(weights, src, freq, br: int, wc: int, interpret: bool):
     rows, w = src.shape
     pad = (-rows) % br
     src_p = jnp.pad(src.astype(jnp.int32), ((0, pad), (0, 0)))

@@ -34,7 +34,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from ._common import DEFAULT_BR, DEFAULT_WC, round_up_pow2
+from ._common import DEFAULT_BR, DEFAULT_WC, resolve_interpret, round_up_pow2
 
 
 def _kernel(w_ref, a_ref, src_ref, freq_ref, delta_ref, seen_ref, *, wc: int):
@@ -60,17 +60,27 @@ def _kernel(w_ref, a_ref, src_ref, freq_ref, delta_ref, seen_ref, *, wc: int):
     seen_ref[...] += jnp.where(freq > 0, gact, 0.0).sum(axis=-1)[None, :]
 
 
-@functools.partial(jax.jit, static_argnames=("br", "wc", "interpret"))
 def ell_propagate_batched_pallas(weights: jnp.ndarray, active: jnp.ndarray,
                                  src: jnp.ndarray, freq: jnp.ndarray,
                                  br: int = DEFAULT_BR, wc: int = DEFAULT_WC,
-                                 interpret: bool = True):
+                                 interpret: bool | None = None):
     """(delta, seen) of one fused propagation round over the [N, R, K] plan.
 
     weights/active: [N, R] float32; src/freq: [N, rows, K] (rows == R for
     the per-rule plan, but any row count works).  Returns two [N, rows]
     float32 arrays.
+
+    ``interpret=None`` auto-resolves (real lowering on TPU, interpret mode
+    elsewhere).  Resolution happens HERE, outside jit, so a mutable backend
+    probe never gets frozen into a compile-cache entry.
     """
+    return _ell_propagate_batched_jit(weights, active, src, freq, br, wc,
+                                      resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("br", "wc", "interpret"))
+def _ell_propagate_batched_jit(weights, active, src, freq,
+                               br: int, wc: int, interpret: bool):
     n, rows, k = src.shape
     pad = (-rows) % br
     src_p = jnp.pad(src.astype(jnp.int32), ((0, 0), (0, pad), (0, 0)))

@@ -1,0 +1,174 @@
+"""Pallas TPU kernel: fused MULTI-round ELL frontier traversal (one launch).
+
+The per-round engines (core/batch.py `_frontier_ell_impl`) run the paper's
+dependent rule-propagation loop as `lax.while_loop` → kernel → XLA: every
+round pays a full dispatch round-trip, the "structural tax" G-TADOC §IV-B
+eliminates by keeping the loop resident on the device.  This kernel runs the
+WHOLE frontier loop inside one `pallas_call`:
+
+  grid = (corpus, round, row-block)
+
+with the round dimension sequential (TPU grids execute in row-major order)
+and the full frontier state — weights, cumulative in-edge counter, this
+round's active mask, the ever-activated set — resident in VMEM scratch for
+the lifetime of a corpus's grid slice.  A round is two phases:
+
+  phase A (every row-block i): gather this block's delta/seen from the
+    state vectors into full-width accumulators at ``[i*br, (i+1)*br)``;
+  phase B (last row-block only): apply the frontier update to the whole
+    state — ``ready = (cur_in + seen == in_deg) & ~ever`` — bump the
+    round counter, and recompute the convergence flag.
+
+Convergence lives in SMEM as a done flag + round counter: once no rule
+becomes ready, every remaining round's body is skipped via `pl.when`, so
+the static round bound costs only empty grid steps.  The bound itself is
+exact: callers pass ``max_rounds = num_levels`` (the DAG's longest-path
+depth, core/grammar.py), which is precisely the number of rounds the
+while_loop form executes — rules at level L activate in round L+1.
+
+State residency: the six scratch vectors are [1, R_pad] float32 each, so a
+corpus needs ~24 bytes/rule of VMEM — ops.py gates the fused path at
+``ELL_FUSED_MAX_RULES`` and falls back to the per-round streaming kernel
+above that (weight-chunk streaming cannot work here: a round reads weights
+every OTHER block just wrote, so the state must be whole).
+
+Bit-exactness: identical adds in identical order to the per-round path —
+all counts are integers < 2^24, exact in float32; converged extra rounds
+add literal 0.0, a no-op on non-negative values.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ._common import DEFAULT_BR, resolve_interpret
+
+
+def _kernel(w0_ref, ind_ref, src_ref, freq_ref, out_ref, rounds_ref,
+            wgt, cur, mask, ever, delta, seen, done_ref, cnt_ref,
+            *, br: int, nb: int):
+    t = pl.program_id(1)                 # round (sequential middle dim)
+    i = pl.program_id(2)                 # row-block (innermost)
+    last_round = pl.num_programs(1) - 1
+
+    @pl.when((t == 0) & (i == 0))
+    def _init():
+        # Seed state for a fresh corpus: weights = caller's W0, nothing
+        # consumed yet, frontier = the zero-in-degree rules (the root; padded
+        # slots have in_deg == 0 but also no out-edges, so they stay inert).
+        m0 = (ind_ref[...] == 0.0).astype(jnp.float32)
+        wgt[...] = w0_ref[...]
+        cur[...] = jnp.zeros_like(cur)
+        mask[...] = m0
+        ever[...] = m0
+        done_ref[0, 0] = jnp.where(jnp.any(m0 > 0), 0, 1).astype(jnp.int32)
+        cnt_ref[0, 0] = 0
+
+    @pl.when(done_ref[0, 0] == 0)
+    def _round():
+        @pl.when(i == 0)
+        def _zero():
+            delta[...] = jnp.zeros_like(delta)
+            seen[...] = jnp.zeros_like(seen)
+
+        # Phase A: this row-block's gather + row-sum into the accumulators.
+        src = src_ref[0]                 # [br, K]
+        freq = freq_ref[0]               # [br, K]
+        idx = src.reshape(-1)
+        gw = jnp.take(wgt[0, :], idx, axis=0).reshape(src.shape)
+        gm = jnp.take(mask[0, :], idx, axis=0).reshape(src.shape)
+        delta[0, pl.ds(i * br, br)] = (freq * gw * gm).sum(axis=-1)
+        seen[0, pl.ds(i * br, br)] = jnp.where(freq > 0, gm, 0.0).sum(axis=-1)
+
+        # Phase B: whole-state frontier update once every block contributed.
+        @pl.when(i == nb - 1)
+        def _apply():
+            w_new = wgt[...] + delta[...]
+            c_new = cur[...] + seen[...]
+            ready = ((c_new == ind_ref[...]) & (ever[...] == 0.0))
+            ready = ready.astype(jnp.float32)
+            wgt[...] = w_new
+            cur[...] = c_new
+            mask[...] = ready
+            ever[...] = ever[...] + ready
+            cnt_ref[0, 0] = cnt_ref[0, 0] + 1
+            done_ref[0, 0] = jnp.where(jnp.any(ready > 0), 0, 1)
+
+    @pl.when((t == last_round) & (i == nb - 1))
+    def _out():
+        out_ref[...] = wgt[...]
+        rounds_ref[0, 0] = cnt_ref[0, 0]
+
+
+def ell_frontier_fused_pallas(weights0: jnp.ndarray, in_deg: jnp.ndarray,
+                              src: jnp.ndarray, freq: jnp.ndarray,
+                              max_rounds: int, br: int = DEFAULT_BR,
+                              interpret: bool | None = None):
+    """Run the whole frontier loop device-resident over the [N, R, K] plan.
+
+    weights0/in_deg: [N, R] float32 (initial weights — 1.0 at the root for
+    the scalar traversal — and per-rule in-degrees); src/freq: [N, R, K]
+    ELL plan (row == destination rule).  ``max_rounds`` must be >= the
+    number of frontier rounds (num_levels is exact).  Returns
+    ``(weights [N, R] float32, rounds [N] int32)`` — rounds is the count of
+    non-converged rounds each corpus actually executed.
+    ``interpret=None`` auto-resolves outside jit (_common.resolve_interpret).
+    """
+    return _ell_frontier_fused_jit(weights0, in_deg, src, freq,
+                                   int(max_rounds), br,
+                                   resolve_interpret(interpret))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("max_rounds", "br", "interpret"))
+def _ell_frontier_fused_jit(weights0, in_deg, src, freq,
+                            max_rounds: int, br: int, interpret: bool):
+    n, rows, k = src.shape
+    pad = (-rows) % br
+    src_p = jnp.pad(src.astype(jnp.int32), ((0, 0), (0, pad), (0, 0)))
+    freq_p = jnp.pad(freq.astype(jnp.float32), ((0, 0), (0, pad), (0, 0)))
+    rtot = rows + pad
+    # Padded rows must stay inert: give them in_deg = -1 so they can never
+    # satisfy ``cur_in == in_deg`` (their src=0/freq=0 rows contribute no
+    # weight, but in_deg == 0 would put them on the initial frontier).
+    w0_p = jnp.pad(weights0.astype(jnp.float32), ((0, 0), (0, pad)))
+    ind_p = jnp.pad(in_deg.astype(jnp.float32), ((0, 0), (0, pad)),
+                    constant_values=-1.0)
+    nb = rtot // br
+    rounds = max(int(max_rounds), 1)
+
+    out, cnt = pl.pallas_call(
+        functools.partial(_kernel, br=br, nb=nb),
+        grid=(n, rounds, nb),
+        in_specs=[
+            pl.BlockSpec((1, rtot), lambda c, t, i: (c, 0)),   # W0
+            pl.BlockSpec((1, rtot), lambda c, t, i: (c, 0)),   # in_deg
+            pl.BlockSpec((1, br, k), lambda c, t, i: (c, i, 0)),
+            pl.BlockSpec((1, br, k), lambda c, t, i: (c, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, rtot), lambda c, t, i: (c, 0)),
+            pl.BlockSpec((1, 1), lambda c, t, i: (c, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, rtot), jnp.float32),
+            jax.ShapeDtypeStruct((n, 1), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, rtot), jnp.float32),    # weights
+            pltpu.VMEM((1, rtot), jnp.float32),    # cumulative in-counter
+            pltpu.VMEM((1, rtot), jnp.float32),    # this round's mask
+            pltpu.VMEM((1, rtot), jnp.float32),    # ever-activated
+            pltpu.VMEM((1, rtot), jnp.float32),    # delta accumulator
+            pltpu.VMEM((1, rtot), jnp.float32),    # seen accumulator
+            pltpu.SMEM((1, 1), jnp.int32),         # done flag
+            pltpu.SMEM((1, 1), jnp.int32),         # round counter
+        ],
+        interpret=interpret,
+    )(w0_p, ind_p, src_p, freq_p)
+    return out[:, :rows], cnt[:, 0]

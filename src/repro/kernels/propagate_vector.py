@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: batched ELL propagation with a VECTOR [R, F] payload.
+
+The scalar kernel (propagate_batched.py) carries one float per rule; the
+per-file traversals — `per_file_weights` and the pack-level statistics that
+feed `search/` — carry a per-file row ``W[r, :]`` per rule.  Historically
+those traversals silently remapped ELL methods back to their segment_sum
+bases; this kernel closes that gap.  One round over the same dense
+``src/freq [N, R, K]`` edge plan:
+
+  delta[n, r, f] = sum_k freq[n, r, k] * W[n, src[n, r, k], f]
+                                       * active[n, src[n, r, k]]
+  seen[n, r]     = sum_k [freq[n, r, k] > 0] * active[n, src[n, r, k]]
+
+Grid = (corpus, row-block, F-block, rule-chunk): the payload matrix streams
+through VMEM as ``(wc, fc)`` tiles — the F axis is blocked exactly like the
+issue's "F-axis-blocked payload" and the rule axis streams in chunks like
+the scalar kernels (out blocks depend only on (n, i, f); chunk jw is the
+innermost revisiting dimension with init at jw == 0), so neither rule count
+nor file count holds a VMEM cliff.  ``seen`` is payload-independent and is
+accumulated only on the first F-block (its out block revisits across
+(jf, jw); untouched revisits keep the buffer).
+
+Root-edge exclusion (the per-file init already accounts for root's
+contributions) is the CALLER's job via the active mask: per-file frontier
+masks start with ``mask[0] == 0`` forever (the root is `ever` from round
+zero), and the leveled schedule zeroes the root column — no ``src != 0``
+gate is needed in-kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ._common import DEFAULT_FC, resolve_interpret, round_up_pow2
+
+# Rows per block and rule-chunk length: smaller than the scalar kernel's —
+# the gather materializes a [BR, K, FC] tile and the payload chunk is
+# (WC, FC) f32 (4 KB/row at FC=128), so both shrink to keep VMEM bounded.
+DEFAULT_BRV = 64
+DEFAULT_WCV = 1 << 12
+
+
+def _kernel(w_ref, a_ref, src_ref, freq_ref, delta_ref, seen_ref,
+            *, wc: int, fc: int):
+    jf = pl.program_id(2)                # F-block
+    jw = pl.program_id(3)                # rule-chunk (innermost)
+
+    @pl.when(jw == 0)
+    def _init():
+        delta_ref[...] = jnp.zeros_like(delta_ref)
+
+    @pl.when((jf == 0) & (jw == 0))
+    def _init_seen():
+        seen_ref[...] = jnp.zeros_like(seen_ref)
+
+    base = jw * wc
+    w = w_ref[0]                         # [wc, fc] payload tile
+    a = a_ref[0, :]                      # [wc] active-mask chunk
+    src = src_ref[0]                     # [BR, K]
+    freq = freq_ref[0]                   # [BR, K] float32
+    loc = src - base
+    in_chunk = (loc >= 0) & (loc < wc)
+    idx = jnp.clip(loc, 0, wc - 1).reshape(-1)
+    gw = jnp.take(w, idx, axis=0).reshape(src.shape + (fc,))   # [BR, K, fc]
+    ga = jnp.take(a, idx, axis=0).reshape(src.shape)
+    ga = jnp.where(in_chunk, ga, 0.0)
+    delta_ref[...] += ((freq * ga)[..., None] * gw).sum(axis=1)[None]
+
+    @pl.when(jf == 0)
+    def _seen():
+        seen_ref[...] += jnp.where(freq > 0, ga, 0.0).sum(axis=-1)[None, :]
+
+
+def ell_propagate_vector_pallas(W: jnp.ndarray, active: jnp.ndarray,
+                                src: jnp.ndarray, freq: jnp.ndarray,
+                                br: int = DEFAULT_BRV, wc: int = DEFAULT_WCV,
+                                fc: int = DEFAULT_FC,
+                                interpret: bool | None = None):
+    """(delta, seen) of one vector-payload round over the [N, R, K] plan.
+
+    W: [N, R, F] float32 payload; active: [N, R] float32 mask; src/freq:
+    [N, rows, K].  Returns ``(delta [N, rows, F], seen [N, rows])``.
+    ``interpret=None`` auto-resolves outside jit (_common.resolve_interpret).
+    """
+    return _ell_propagate_vector_jit(W, active, src, freq, br, wc, fc,
+                                     resolve_interpret(interpret))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("br", "wc", "fc", "interpret"))
+def _ell_propagate_vector_jit(W, active, src, freq,
+                              br: int, wc: int, fc: int, interpret: bool):
+    n, rows, k = src.shape
+    R, F = W.shape[1], W.shape[2]
+    pad = (-rows) % br
+    src_p = jnp.pad(src.astype(jnp.int32), ((0, 0), (0, pad), (0, 0)))
+    freq_p = jnp.pad(freq.astype(jnp.float32), ((0, 0), (0, pad), (0, 0)))
+    rtot = rows + pad
+    wc = min(wc, round_up_pow2(R))
+    fc = min(fc, round_up_pow2(F))
+    wpad = (-R) % wc
+    fpad = (-F) % fc
+    w_p = jnp.pad(W.astype(jnp.float32), ((0, 0), (0, wpad), (0, fpad)))
+    a_p = jnp.pad(active.astype(jnp.float32), ((0, 0), (0, wpad)))
+    wtot, ftot = R + wpad, F + fpad
+
+    delta, seen = pl.pallas_call(
+        functools.partial(_kernel, wc=wc, fc=fc),
+        grid=(n, rtot // br, ftot // fc, wtot // wc),
+        in_specs=[
+            pl.BlockSpec((1, wc, fc), lambda c, i, jf, jw: (c, jw, jf)),
+            pl.BlockSpec((1, wc), lambda c, i, jf, jw: (c, jw)),
+            pl.BlockSpec((1, br, k), lambda c, i, jf, jw: (c, i, 0)),
+            pl.BlockSpec((1, br, k), lambda c, i, jf, jw: (c, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, br, fc), lambda c, i, jf, jw: (c, i, jf)),
+            pl.BlockSpec((1, br), lambda c, i, jf, jw: (c, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, rtot, ftot), jnp.float32),
+            jax.ShapeDtypeStruct((n, rtot), jnp.float32),
+        ],
+        interpret=interpret,
+    )(w_p, a_p, src_p, freq_p)
+    return delta[:, :rows, :F], seen[:, :rows]

@@ -2,6 +2,8 @@
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -45,3 +47,71 @@ def ell_propagate_batched_ref(weights: jnp.ndarray, active: jnp.ndarray,
     delta = (f * gw * ga).sum(axis=-1)
     seen = jnp.where(f > 0, ga, 0.0).sum(axis=-1)
     return delta, seen
+
+
+def ell_propagate_vector_ref(W: jnp.ndarray, active: jnp.ndarray,
+                             src: jnp.ndarray, freq: jnp.ndarray):
+    """(delta, seen) of one vector-payload round over the [N, R, K] plan.
+
+    delta[n, r, f] = sum_k freq[n,r,k] * W[n, src[n,r,k], f]
+                                       * active[n, src[n,r,k]]
+    seen[n, r]     = sum_k [freq[n,r,k] > 0] * active[n, src[n,r,k]]
+
+    Gather form, the CPU production path for the per-file ELL traversals
+    (propagate_vector.py is the TPU lowering of the same plan).  The
+    gathered intermediate is [N, rows*K, F] — ops.py gates plan sizes so
+    this stays within the dense-plan budget.
+    """
+    n, rows, k = src.shape
+    flat = src.reshape(n, -1).astype(jnp.int32)
+    w = W.astype(jnp.float32)
+    a = active.astype(jnp.float32)
+    f = freq.astype(jnp.float32)
+    gw = jnp.take_along_axis(w, flat[:, :, None], axis=1)
+    gw = gw.reshape(src.shape + (W.shape[-1],))            # [N, rows, K, F]
+    ga = jnp.take_along_axis(a, flat, axis=1).reshape(src.shape)
+    delta = ((f * ga)[..., None] * gw).sum(axis=2)         # [N, rows, F]
+    seen = jnp.where(f > 0, ga, 0.0).sum(axis=-1)
+    return delta, seen
+
+
+def ell_frontier_fused_ref(weights0: jnp.ndarray, in_deg: jnp.ndarray,
+                           src: jnp.ndarray, freq: jnp.ndarray,
+                           max_rounds: int, with_rounds: bool = False):
+    """Whole frontier loop over the ELL plan as ONE jitted fori_loop.
+
+    The jnp production form of propagate_fused.py: a static ``max_rounds``
+    trip count (num_levels is exact — see the kernel docstring) with no
+    per-round convergence test, so the per-round host round-trip AND the
+    while_loop's cond evaluation both disappear.  Converged extra rounds
+    are exact no-ops (delta == 0.0 and ``x + 0.0 == x`` on non-negative
+    float32 counts).  Returns weights [N, R] — or ``(weights, rounds)``
+    with the per-corpus non-converged round count when ``with_rounds``
+    (rounds costs a per-round reduction, so production leaves it off).
+    """
+    return _ell_frontier_fused_ref_jit(weights0, in_deg, src, freq,
+                                       int(max_rounds), bool(with_rounds))
+
+
+@functools.partial(jax.jit, static_argnames=("max_rounds", "with_rounds"))
+def _ell_frontier_fused_ref_jit(weights0, in_deg, src, freq,
+                                max_rounds: int, with_rounds: bool):
+    n = src.shape[0]
+    w0 = weights0.astype(jnp.float32)
+    ind = in_deg.astype(jnp.int32)
+    mask0 = (ind == 0).astype(jnp.float32)
+    rounds0 = jnp.zeros(n, jnp.int32)
+
+    def body(_, state):
+        w, cur, mask, ever, rounds = state
+        if with_rounds:
+            rounds = rounds + jnp.any(mask > 0, axis=1).astype(jnp.int32)
+        delta, seen = ell_propagate_batched_ref(w, mask, src, freq)
+        w = w + delta
+        cur = cur + seen.astype(jnp.int32)
+        ready = ((cur == ind) & (ever == 0.0)).astype(jnp.float32)
+        return w, cur, ready, ever + ready, rounds
+
+    state = (w0, jnp.zeros_like(ind), mask0, mask0, rounds0)
+    w, _, _, _, rounds = jax.lax.fori_loop(0, max(max_rounds, 1), body, state)
+    return (w, rounds) if with_rounds else w

@@ -26,12 +26,15 @@ from repro.core.grammar import GrammarArrays
 
 from .scoring import avg_doc_len, bm25_norm, idf
 
-#: Per-file traversals only exist on the segment_sum base (the ELL kernels
-#: are scalar — see core/batch.py DESIGN note), so index builds map the
-#: ELL/auto methods onto their bases exactly like batched_per_file_weights.
-_BASE_METHOD = {"frontier_ell": "frontier", "leveled_ell": "leveled",
-                "auto": "frontier", "top_down": "frontier",
-                "bottom_up": "frontier"}
+#: The per-file traversal base an index build (or the pack-level search
+#: statistics) runs for each requested method.  ELL methods now pass
+#: through to the vector-payload per-file engines
+#: (kernels/propagate_vector.py) instead of remapping to segment_sum;
+#: ``frontier_fused`` runs the per-round ELL base (the fused kernel is
+#: scalar-payload) and ``auto`` keeps its historical frontier base here so
+#: index cache keys stay stable across pack shapes.
+_BASE_METHOD = {"frontier_fused": "frontier_ell", "auto": "frontier",
+                "top_down": "frontier", "bottom_up": "frontier"}
 
 
 def base_method(method: str) -> str:

@@ -55,12 +55,15 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.core import GrammarArrays, analytics as _analytics
-from repro.core.batch import (ANALYTICS_KINDS, GrammarBatch, run_batched,
-                              _round_up_pow2)
+from repro.core.batch import (ANALYTICS_KINDS, PER_FILE_KINDS, GrammarBatch,
+                              is_segment_sum_fallback, resolve_batch_method,
+                              run_batched, _round_up_pow2)
+from repro.core.traversal import resolve_single_method
 from repro.data.store import CompressedCorpus
 from repro.distributed.shard_batch import (corpus_mesh, mesh_size,
                                            shard_batch)
 from repro.search.engine import batched_search, search_corpus
+from repro.search.index import base_method
 from repro.search.scoring import (DEFAULT_TOP_K, KIND_SCHEME, SEARCH_KINDS,
                                   normalize_terms)
 
@@ -132,6 +135,12 @@ class ServerStats:
     # distinct pad signatures -> batched-call count (bounded by the number
     # of distinct bucket shapes, not by traffic volume)
     signatures: Dict[Tuple[int, ...], int] = field(default_factory=dict)
+    # "requested->resolved" -> count of executions where an explicitly
+    # requested ELL-family method degraded to its segment_sum base (the
+    # engine's shape-gate valves: plan width / absolute entries / the
+    # vector-payload budget).  The engines never remap silently any more —
+    # every downgrade lands here (core.batch.is_segment_sum_fallback).
+    method_fallbacks: Dict[str, int] = field(default_factory=dict)
 
     # ----- async queue counters (written by serving/queue.py) -----
     submitted: int = 0                 # queries entered through submit()
@@ -187,15 +196,22 @@ class ServerStats:
     def count_flush(self, reason: str) -> None:
         self.flushes[reason] = self.flushes.get(reason, 0) + 1
 
+    def count_fallback(self, requested: str, resolved: str) -> None:
+        key = f"{requested}->{resolved}"
+        self.method_fallbacks[key] = self.method_fallbacks.get(key, 0) + 1
+
 
 class AnalyticsServer:
     """Groups (corpus, query) requests and runs them as batched programs."""
 
     # methods every execution path (single and batched) supports; the
     # *_ell variants run the batched traversal on the dense ELL edge plan
-    # (core/batch.py DESIGN note) and "auto" lets the occupancy dispatch in
-    # kernels.ops pick ELL vs segment_sum per pack.
-    METHODS = ("frontier", "leveled", "frontier_ell", "leveled_ell", "auto")
+    # (core/batch.py DESIGN note), "frontier_fused" runs the whole frontier
+    # loop in one kernel launch (kernels/propagate_fused.py; per-file and
+    # search traversals take its per-round ELL base), and "auto" lets the
+    # occupancy dispatch in kernels.ops pick the engine per pack.
+    METHODS = ("frontier", "leveled", "frontier_ell", "leveled_ell",
+               "frontier_fused", "auto")
     # per-corpus traversal used when a chunk degenerates to one corpus
     # ("auto" resolves per pack; singles take the plain frontier)
     _SINGLE_METHOD = {"auto": "frontier"}
@@ -378,6 +394,30 @@ class AnalyticsServer:
                 f"{kind!r}; group keys normalize them to None "
                 f"(Query.effective_terms/effective_k)")
 
+    def _count_fallback(self, kind: str, gb: Optional[GrammarBatch] = None,
+                        ga: Optional[GrammarArrays] = None) -> None:
+        """Predict the engine's traversal routing for this execution and
+        count explicit-ELL requests that degrade to a segment_sum base
+        (``stats.method_fallbacks``).  Uses the same resolution the engines
+        dispatch on (core.batch.resolve_batch_method / the single-corpus
+        analogue), so the counter mirrors what actually runs without the
+        engines having to report back through the jitted paths."""
+        per_file = kind in PER_FILE_KINDS or kind in SEARCH_KINDS
+        requested = self.method
+        if gb is None:
+            requested = self._SINGLE_METHOD.get(requested, requested)
+        if kind in SEARCH_KINDS:
+            # search statistics run the per-file base of the requested
+            # method (search/index.py base_method)
+            requested = base_method(requested)
+        if gb is not None:
+            resolved = resolve_batch_method(gb, requested, per_file=per_file)
+        else:
+            resolved = resolve_single_method(ga, requested,
+                                             per_file=per_file)
+        if is_segment_sum_fallback(requested, resolved):
+            self.stats.count_fallback(requested, resolved)
+
     def _execute_batched(self, gb: GrammarBatch, kind: str,
                          l: Optional[int], terms: Optional[Tuple[int, ...]],
                          k: Optional[int]) -> List:
@@ -421,6 +461,7 @@ class AnalyticsServer:
             if name in self._stores:
                 # CompressedCorpus: the per-corpus path reuses the traversal
                 # weights (and search index) memoized on the store
+                self._count_fallback(kind, ga=self._corpora[name])
                 out = {name: self._run_single(kind, name, l=l, terms=terms,
                                               k=k)}
                 sig = SINGLE_SIGNATURE
@@ -430,12 +471,14 @@ class AnalyticsServer:
                 # statistics) across calls — repeat single-corpus traffic
                 # costs one dispatch, not one re-plan + re-compile
                 gb = self._get_batch([name])
+                self._count_fallback(kind, gb=gb)
                 vals = self._execute_batched(gb, kind, l, terms, k)
                 sig = gb.signature
                 out = {name: vals[0]}
             self.stats.single_calls += 1
         else:
             gb = self._get_batch(list(chunk), shards=shards)
+            self._count_fallback(kind, gb=gb)
             vals = self._execute_batched(gb, kind, l, terms, k)
             self.stats.batched_calls += 1
             if shards > 1:

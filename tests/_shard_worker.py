@@ -73,7 +73,7 @@ def test_sharded_matches_oracle_and_single_device():
         for kind in ANALYTICS_KINDS:
             wants = [oracle(ga, kind, stream=s)
                      for ga, s in zip(gas, streams)]
-            for method in ("frontier", "leveled_ell"):
+            for method in ("frontier", "leveled_ell", "frontier_fused"):
                 got = run_sharded(gas, kind, mesh=mesh, method=method)
                 single = run_batched(gb1, kind, method=method)
                 assert len(got) == n

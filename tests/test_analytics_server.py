@@ -166,7 +166,8 @@ def test_single_query_memoizes_only_needed_traversal():
     np.testing.assert_allclose(c1, c2, rtol=1e-6)
 
 
-@pytest.mark.parametrize("method", ["frontier_ell", "auto"])
+@pytest.mark.parametrize("method", ["frontier_ell", "leveled_ell",
+                                    "frontier_fused", "auto"])
 def test_ell_methods_served(method):
     """ELL-plan methods run both the batched pair path and the single path
     and still match the single-corpus analytics exactly."""
@@ -183,6 +184,49 @@ def test_ell_methods_served(method):
     np.testing.assert_allclose(res[1], np.asarray(word_count(ga2)))
     np.testing.assert_allclose(res[2], np.asarray(term_vector(ga)))
     assert srv.stats.batched_calls == 1 and srv.stats.single_calls == 1
+
+
+def test_method_fallbacks_counted(monkeypatch):
+    """An explicitly requested ELL method that the shape gates degrade to
+    its segment_sum base must be COUNTED in ServerStats.method_fallbacks —
+    the historical silent remap is gone."""
+    import repro.kernels.ops as kops
+
+    rng = np.random.default_rng(33)
+    ga, _ = _make(rng, 24, 3)
+    ga2, _ = _make(rng, 30, 2)
+
+    # clean run: gates don't trip on these small packs -> no fallbacks
+    srv = AnalyticsServer(method="frontier_ell")
+    srv.register("a", ga)
+    srv.register("b", ga2)
+    srv.run([Query("a", "word_count"), Query("b", "word_count")])
+    assert srv.stats.method_fallbacks == {}
+
+    # trip the plan-width valve: every dense plan is now ineligible, so
+    # frontier_ell degrades to frontier on both batched and single paths
+    monkeypatch.setattr(kops, "ELL_BATCH_MAX_WIDTH", 0)
+    srv2 = AnalyticsServer(method="frontier_ell")
+    srv2.register("a", ga)
+    srv2.register("b", ga2)
+    res = srv2.run([Query("a", "word_count"),       # batched pair
+                    Query("b", "word_count"),
+                    Query("a", "term_vector")])     # single (size-1 pack)
+    assert srv2.stats.method_fallbacks == {"frontier_ell->frontier": 2}
+    # the degraded engine still produces the exact frontier results
+    np.testing.assert_allclose(res[0], np.asarray(word_count(ga)))
+    np.testing.assert_allclose(res[2], np.asarray(term_vector(ga)))
+
+    # store-backed single path counts too; search kinds resolve via their
+    # per-file base (frontier_fused -> frontier_ell -> frontier here)
+    files = make_repetitive_files(rng, vocab=16, n_files=2)
+    cc = CompressedCorpus.build(files, vocab_size=16)
+    srv3 = AnalyticsServer(method="frontier_fused")
+    srv3.register("s", cc)
+    srv3.run([Query("s", "word_count"),
+              Query("s", "search_bm25", terms=(1, 2), k=2)])
+    assert srv3.stats.method_fallbacks == {"frontier_fused->frontier": 1,
+                                           "frontier_ell->frontier": 1}
 
 
 def test_constructor_validation():

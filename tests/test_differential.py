@@ -45,7 +45,8 @@ from _oracle import (assert_result_equal, full_stream, oracle, oracle_batch,
                      oracle_search)
 from conftest import make_repetitive_files
 
-BATCHED_METHODS = ("frontier", "leveled", "frontier_ell", "leveled_ell")
+BATCHED_METHODS = ("frontier", "leveled", "frontier_ell", "leveled_ell",
+                   "frontier_fused")
 SEARCH_SCHEMES = ("bm25", "tfidf")
 
 
@@ -150,7 +151,7 @@ def test_sharded_paths_match_oracle(seed):
     mesh = corpus_mesh()
     for kind in ANALYTICS_KINDS:
         wants = oracle_batch(gas, kind)
-        for method in ("frontier", "leveled_ell"):
+        for method in ("frontier", "leveled_ell", "frontier_fused"):
             got = run_sharded(gas, kind, mesh=mesh, method=method, l=3)
             for i, (g_i, w_i) in enumerate(zip(got, wants)):
                 assert_result_equal(

@@ -212,7 +212,7 @@ def test_single_corpus_ell_cache_evicted_on_gc():
 def test_ell_engines_match_segment_sum_ragged(ragged_gb):
     gb, gas = ragged_gb
     want = np.asarray(batched_top_down_weights(gb, method="frontier"))
-    for method in ("frontier_ell", "leveled_ell"):
+    for method in ("frontier_ell", "leveled_ell", "frontier_fused"):
         got = np.asarray(batched_top_down_weights(gb, method=method))
         np.testing.assert_array_equal(got, want, err_msg=method)
     # and against the single-corpus oracle on true sizes
@@ -227,7 +227,7 @@ def test_ell_engines_size1_batch():
     ga = _build_corpus(rng, 60, 3, 400)
     gb = GrammarBatch.build([ga])
     want = np.asarray(batched_top_down_weights(gb, method="frontier"))
-    for method in ("frontier_ell", "leveled_ell", "auto"):
+    for method in ("frontier_ell", "leveled_ell", "frontier_fused", "auto"):
         got = np.asarray(batched_top_down_weights(gb, method=method))
         np.testing.assert_array_equal(got, want, err_msg=method)
 
@@ -237,16 +237,22 @@ def test_ell_engines_empty_corpus_batch():
     gas = [_build_corpus(rng, 20, 2, 0), _build_corpus(rng, 25, 2, 150)]
     gb = GrammarBatch.build(gas)
     want = np.asarray(batched_top_down_weights(gb, method="frontier"))
-    for method in ("frontier_ell", "leveled_ell"):
+    for method in ("frontier_ell", "leveled_ell", "frontier_fused"):
         got = np.asarray(batched_top_down_weights(gb, method=method))
         np.testing.assert_array_equal(got, want, err_msg=method)
 
 
-def test_per_file_ell_maps_to_segment_sum(ragged_gb):
+def test_per_file_ell_engines_match_segment_sum(ragged_gb):
+    """The per-file ELL methods run REAL vector-payload [R, F] rounds now
+    (kernels/propagate_vector.py) — the historical silent remap to the
+    segment_sum bases is gone — and stay bit-identical to them.
+    ``frontier_fused`` takes its per-round ELL base per-file (the fused
+    kernel is scalar-payload)."""
     gb, _ = ragged_gb
     want = np.asarray(batched_per_file_weights(gb, method="frontier"))
-    got = np.asarray(batched_per_file_weights(gb, method="frontier_ell"))
-    np.testing.assert_array_equal(got, want)
+    for method in ("frontier_ell", "frontier_fused"):
+        got = np.asarray(batched_per_file_weights(gb, method=method))
+        np.testing.assert_array_equal(got, want, err_msg=method)
     want_lv = np.asarray(batched_per_file_weights(gb, method="leveled"))
     got_lv = np.asarray(batched_per_file_weights(gb, method="leveled_ell"))
     np.testing.assert_array_equal(got_lv, want_lv)

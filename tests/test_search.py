@@ -23,6 +23,7 @@ from repro.search import (DEFAULT_TOP_K, SEARCH_KINDS, batch_search_stats,
                           normalize_terms, search_corpus, search_index_topk)
 from repro.serving import (AnalyticsServer, AsyncAnalyticsServer, Query,
                            SERVED_KINDS)
+from _hypothesis_compat import given, settings, st
 from _oracle import oracle_search
 from conftest import make_repetitive_files
 
@@ -59,8 +60,17 @@ def test_search_index_memoized_on_store(seeded_rng):
     assert ("search_index", "frontier") in cc.cached_weight_keys()
     # the index build shares the memoized per-file traversal
     assert ("per_file", "frontier") in cc.cached_weight_keys()
-    # ELL/auto methods collapse onto the segment_sum base index
-    assert cc.search_index("frontier_ell") is si
+    # "auto" still collapses onto the frontier base; the ELL methods now
+    # run their own vector-payload per-file traversal — a distinct memo
+    # entry with bit-identical statistics (frontier_fused shares the
+    # frontier_ell base: the fused kernel is scalar-payload)
+    assert cc.search_index("auto") is si
+    si_ell = cc.search_index("frontier_ell")
+    assert si_ell is not si
+    assert cc.search_index("frontier_ell") is si_ell     # memoized too
+    assert cc.search_index("frontier_fused") is si_ell
+    np.testing.assert_array_equal(si_ell.tf, si.tf)
+    np.testing.assert_array_equal(si_ell.df, si.df)
     cc.clear_weight_cache()
     assert cc.cached_weight_keys() == ()
 
@@ -70,7 +80,13 @@ def test_batch_search_stats_memoized_on_pack(seeded_rng):
     gb = GrammarBatch.build(gas)
     st = batch_search_stats(gb)
     assert batch_search_stats(gb) is st                  # memoized
-    assert batch_search_stats(gb, "frontier_ell") is st  # same base
+    assert batch_search_stats(gb, "auto") is st          # same base
+    # ELL methods keep their own (bit-identical) stats entry now that the
+    # per-file traversal runs on the vector-payload ELL engines
+    st_ell = batch_search_stats(gb, "frontier_ell")
+    assert st_ell is not st
+    assert batch_search_stats(gb, "frontier_fused") is st_ell
+    np.testing.assert_array_equal(np.asarray(st_ell.tv), np.asarray(st.tv))
     for i, ga in enumerate(gas):
         si = build_search_index(ga)
         np.testing.assert_array_equal(st.df[i, : ga.vocab_size], si.df)
@@ -95,6 +111,55 @@ def test_masked_top_k_ties_break_toward_lower_index():
         masked_top_k(scores, valid, 0)
     with pytest.raises(ValueError):
         masked_top_k(scores, valid, 6)
+
+
+def test_masked_top_k_k_exceeds_valid_count():
+    """k larger than the number of VALID slots is legal (only k > M is an
+    error): the tail of the row is filled with -inf values whose indices
+    walk the masked slots in ascending order (lax.top_k's lower-index
+    tie-break over equal -inf)."""
+    scores = jnp.asarray(np.array([[2.0, 7.0, 1.0, 5.0]], np.float32))
+    valid = jnp.asarray(np.array([[False, True, False, True]]))
+    vals, idx = masked_top_k(scores, valid, 4)
+    np.testing.assert_array_equal(np.asarray(idx)[0], [1, 3, 0, 2])
+    np.testing.assert_array_equal(np.asarray(vals)[0],
+                                  [7.0, 5.0, -np.inf, -np.inf])
+    # the retrieval layer's contract: everything past the valid count is
+    # exactly -inf, so callers can trim on finiteness alone
+    assert np.isfinite(np.asarray(vals)[0, :2]).all()
+
+
+def test_masked_top_k_all_invalid_rows():
+    """A row with zero valid slots must yield all--inf values (never a
+    stale score) with the deterministic 0..k-1 index walk, and must not
+    poison sibling rows in the same batch."""
+    scores = jnp.asarray(np.array([[3.0, 1.0, 2.0],
+                                   [9.0, 8.0, 7.0]], np.float32))
+    valid = jnp.asarray(np.array([[False, False, False],
+                                  [True, True, True]]))
+    vals, idx = masked_top_k(scores, valid, 2)
+    np.testing.assert_array_equal(np.asarray(vals)[0], [-np.inf, -np.inf])
+    np.testing.assert_array_equal(np.asarray(idx)[0], [0, 1])
+    np.testing.assert_array_equal(np.asarray(vals)[1], [9.0, 8.0])
+    np.testing.assert_array_equal(np.asarray(idx)[1], [0, 1])
+
+
+@given(st.lists(st.integers(0, 5), min_size=1, max_size=12),
+       st.integers(1, 12))
+@settings(deadline=None, max_examples=25)
+def test_masked_top_k_tie_break_deterministic_under_permutation(ints, k):
+    """Property: ties resolve toward the LOWER index, so sorting by
+    (-value, index) is a complete oracle — including duplicated scores and
+    any k up to the axis length."""
+    m = len(ints)
+    k = min(k, m)
+    scores = np.asarray(ints, np.float32)[None]
+    valid = (scores >= 1.0)          # 0-scores double as invalid slots
+    vals, idx = masked_top_k(jnp.asarray(scores), jnp.asarray(valid), k)
+    masked = np.where(valid[0], scores[0], -np.inf)
+    order = np.lexsort((np.arange(m), -masked))[:k]
+    np.testing.assert_array_equal(np.asarray(idx)[0], order)
+    np.testing.assert_array_equal(np.asarray(vals)[0], masked[order])
 
 
 # ------------------------------------------------------ ranking contracts --

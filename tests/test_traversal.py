@@ -34,9 +34,21 @@ def _oracle_weights(ga):
 def test_engines_agree(ga):
     ga, files, g = ga
     oracle = _oracle_weights(ga)
-    for method in ("frontier", "leveled", "frontier_ell", "leveled_ell"):
+    for method in ("frontier", "leveled", "frontier_ell", "leveled_ell",
+                   "frontier_fused"):
         w = np.asarray(top_down_weights(ga, method))
         assert np.allclose(w, oracle), method
+
+
+def test_per_file_engines_agree(ga):
+    """The per-file ELL engines (vector-payload rounds) == segment_sum
+    bases; frontier_fused runs its per-round ELL base per-file."""
+    ga, _, _ = ga
+    want = np.asarray(per_file_weights(ga, "frontier"))
+    for method in ("leveled", "frontier_ell", "leveled_ell",
+                   "frontier_fused"):
+        got = np.asarray(per_file_weights(ga, method))
+        np.testing.assert_allclose(got, want, rtol=1e-6, err_msg=method)
 
 
 def test_rounds_equal_dag_depth(ga):
