@@ -37,6 +37,16 @@ visible, rows then measure the transparent fallback and speedup ~1).  Run
 under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to exercise a
 real 8-way mesh on CPU — CI's multidevice lane does.
 
+``ingest/*`` rows time the streaming ingestion tier (data/store.py
+``append_files``): appending a tail of files onto an existing corpus's
+live Sequitur state vs recompressing the whole concatenated file list
+from scratch.  ``ingest/append`` and ``ingest/rebuild`` are seconds per
+ingest of the same tail, ``ingest/speedup`` is rebuild/append (the floor
+in docs/benchmarks.md binds on it: incremental must beat recompression),
+and ``ingest/append_tokens_per_s`` is the tail-token throughput of the
+incremental path.  Append mutates the corpus, so each repetition clones a
+fresh base corpus outside the timed region.
+
 ``run`` returns the full timing dict; ``benchmarks.run`` serializes it to
 BENCH_batch.json so CI tracks the perf trajectory across PRs.
 """
@@ -55,6 +65,8 @@ from repro.core import (GrammarArrays, GrammarBatch, batched_term_vector,
 from repro.distributed.shard_batch import corpus_mesh, mesh_size, shard_batch
 from repro.search import (batched_search, build_search_index,
                           search_index_topk)
+
+from repro.data import CompressedCorpus
 
 from .common import emit, timeit
 
@@ -135,6 +147,50 @@ def _autotune_rows(gb: GrammarBatch, n: int, t_seg: float, t_ell: float,
             "winner": e["winner"], "winner_us": e["us"],
             "default_us": e["default_us"], "winner_vs_default": ratio}
     return out
+
+
+def _ingest_rows(smoke: bool) -> dict:
+    """Time the streaming ingestion tier: incremental ``append_files`` of a
+    tail onto an existing corpus vs recompressing the concatenation from
+    scratch.  Appending mutates the corpus, so a fresh base is built
+    (untimed) for every timed repetition; the base's compressor state is
+    live, so the append measures exactly the marginal Sequitur work plus
+    one re-export — the cost an online ingest pipeline actually pays."""
+    rng = np.random.default_rng(23)
+    vocab = 120
+    n_base, n_tail = (4, 2) if smoke else (16, 4)
+    phrase = rng.integers(0, vocab, 8)
+
+    def mk_file(size: int) -> np.ndarray:
+        parts, total = [], 0
+        while total < size:
+            p = (phrase if rng.random() < 0.5
+                 else rng.integers(0, vocab, int(rng.integers(3, 12))))
+            parts.append(p)
+            total += len(p)
+        return np.concatenate(parts)[:size]
+
+    base = [mk_file(400) for _ in range(n_base)]
+    tail = [mk_file(400) for _ in range(n_tail)]
+    repeat, warmup = (2, 1) if smoke else (5, 1)
+
+    fresh = iter([CompressedCorpus.build(base, vocab)
+                  for _ in range(repeat + warmup)])
+    t_append = timeit(lambda: next(fresh).append_files(tail),
+                      repeat=repeat, warmup=warmup)
+    t_rebuild = timeit(lambda: CompressedCorpus.build(base + tail, vocab),
+                       repeat=repeat, warmup=warmup)
+    speedup = t_rebuild / max(t_append, 1e-12)
+    tail_tokens = int(sum(len(f) for f in tail))
+    tok_per_s = tail_tokens / max(t_append, 1e-12)
+    emit("ingest/append", t_append, f"base={n_base};tail={n_tail}")
+    emit("ingest/rebuild", t_rebuild, f"files={n_base + n_tail}")
+    emit("ingest/speedup", 0.0, f"{speedup:.2f}x")
+    emit("ingest/append_tokens_per_s", 0.0, f"{tok_per_s:.0f}")
+    return {"base_files": n_base, "tail_files": n_tail,
+            "tail_tokens": tail_tokens,
+            "append_us": t_append * 1e6, "rebuild_us": t_rebuild * 1e6,
+            "speedup": speedup, "append_tokens_per_s": tok_per_s}
 
 
 def run(smoke: bool = False) -> dict:
@@ -254,6 +310,8 @@ def run(smoke: bool = False) -> dict:
         out["sharded"]["apps"][app] = {
             "single_us": t_one * 1e6, "sharded_us": t_sh * 1e6,
             "speedup": sh_speedup}
+
+    out["ingest"] = _ingest_rows(smoke)
     return out
 
 

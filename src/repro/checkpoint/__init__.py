@@ -1,6 +1,7 @@
 """Checkpointing: sharded npz + manifest, atomic publish, restart/elastic."""
 
-from .ckpt import save_checkpoint, restore_checkpoint, latest_step, CheckpointManager
+from .ckpt import (save_checkpoint, restore_checkpoint, latest_step,
+                   save_corpus, restore_corpus, CheckpointManager)
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
-           "CheckpointManager"]
+           "save_corpus", "restore_corpus", "CheckpointManager"]

@@ -123,6 +123,66 @@ def restore_checkpoint(directory: str, template: Any,
     return tree, manifest["step"], manifest.get("extra", {})
 
 
+def save_corpus(directory: str, step: int, corpus,
+                keep: int = 3) -> str:
+    """Checkpoint a :class:`~repro.data.store.CompressedCorpus` mid-ingest.
+
+    The grammar arrays and the file table ride the standard sharded-npz
+    tree; scalar metadata (vocab/file/rule/level counts) and the ingest
+    ``epoch`` ride the manifest's ``extra`` blob, so a snapshot taken
+    between two ``append_files`` calls restores at the exact same epoch —
+    artifacts derived before the snapshot stay distinguishable from ones
+    derived after the restore (the staleness guard keeps working across a
+    restart).  Lazy import keeps checkpoint importable below the data
+    layer."""
+    from repro.data.store import _ARRAY_FIELDS, _META_FIELDS
+    tree = {
+        "ga": {name: getattr(corpus.ga, name) for name in _ARRAY_FIELDS},
+        "files": {"file_starts": corpus.file_starts,
+                  "file_lens": corpus.file_lens},
+    }
+    extra = {
+        "kind": "compressed_corpus",
+        "epoch": int(corpus.epoch),
+        "meta": {name: int(getattr(corpus.ga, name))
+                 for name in _META_FIELDS},
+    }
+    return save_checkpoint(directory, step, tree, extra, keep)
+
+
+def restore_corpus(directory: str, step: Optional[int] = None):
+    """Restore a :func:`save_corpus` snapshot.  Returns
+    ``(CompressedCorpus, step)``; the corpus resumes at its saved epoch
+    with an empty weight cache (memos are derived state — recomputed, and
+    epoch-stamped, on first use) and no live compressor state (rebuilt by
+    replay on the first post-restore ``append_files``)."""
+    from repro.data.store import (_ARRAY_FIELDS, CompressedCorpus,
+                                  GrammarArrays)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    # vet the manifest BEFORE restoring: a non-corpus checkpoint has a
+    # different leaf set and would fail with an opaque KeyError otherwise
+    with open(os.path.join(directory, f"step_{step:09d}",
+                           "manifest.json")) as f:
+        kind = json.load(f).get("extra", {}).get("kind")
+    if kind != "compressed_corpus":
+        raise ValueError(f"checkpoint at {directory} step {step} is not a "
+                         f"corpus snapshot (kind={kind!r})")
+    template = {
+        "ga": {name: np.zeros(0) for name in _ARRAY_FIELDS},
+        "files": {"file_starts": np.zeros(0), "file_lens": np.zeros(0)},
+    }
+    tree, step, extra = restore_checkpoint(directory, template, step)
+    ga = GrammarArrays(**tree["ga"], **extra["meta"])
+    corpus = CompressedCorpus(ga=ga,
+                              file_starts=tree["files"]["file_starts"],
+                              file_lens=tree["files"]["file_lens"],
+                              epoch=int(extra["epoch"]))
+    return corpus, step
+
+
 def _gc(directory: str, keep: int) -> None:
     steps = sorted(
         int(d.split("_")[1]) for d in os.listdir(directory)

@@ -7,8 +7,9 @@ Pipeline: ``sequitur.compress_files`` (offline, host) ->
 and ``selector`` choosing the traversal strategy.
 """
 
-from .sequitur import Grammar, compress, compress_files
-from .grammar import GrammarArrays, flatten, expand_range
+from .sequitur import (Grammar, IncrementalSequitur, compress,
+                       compress_files)
+from .grammar import GrammarArrays, StaleGrammarError, flatten, expand_range
 from .traversal import (top_down_weights, per_file_weights, bottom_up_tables,
                         bottom_up_bounds, traversal_rounds)
 from .analytics import (word_count, sort_words, inverted_index, term_vector,
@@ -25,8 +26,8 @@ from .batch import (GrammarBatch, batched_top_down_weights,
                     ANALYTICS_KINDS)
 
 __all__ = [
-    "Grammar", "compress", "compress_files",
-    "GrammarArrays", "flatten", "expand_range",
+    "Grammar", "IncrementalSequitur", "compress", "compress_files",
+    "GrammarArrays", "StaleGrammarError", "flatten", "expand_range",
     "top_down_weights", "per_file_weights", "bottom_up_tables",
     "bottom_up_bounds", "traversal_rounds",
     "word_count", "sort_words", "inverted_index", "term_vector",

@@ -83,7 +83,8 @@ try:
 except ImportError:  # pragma: no cover
     from jax.experimental.shard_map import shard_map
 
-from .grammar import GrammarArrays, pow2_bucket as _pow2_bucket
+from .grammar import (GrammarArrays, StaleGrammarError,
+                      pow2_bucket as _pow2_bucket)
 from . import sequence as _sequence
 from .sequence import _K_HEAD, _K_LIT, _K_TAIL
 
@@ -161,6 +162,16 @@ class GrammarBatch:
     # when the pack was padded up to a mesh multiple (None: all rows real)
     mesh: Any = None
     n_real: Optional[int] = None
+
+    # ingest-tier staleness guard: the source-corpus epoch of each packed
+    # row at pack time (None when the pack was built from bare immutable
+    # GrammarArrays with no mutable store behind them).  A pack snapshots
+    # its gas, so the pack itself stays internally consistent forever —
+    # including every lazy plan below, which derives from those snapshot
+    # arrays — but serving it for a corpus whose store has since absorbed
+    # appended files would answer with pre-append data.  check_epochs is
+    # the loud guard against that.
+    epochs: Optional[Tuple[int, ...]] = None
 
     # per-batch memo for host-side sequence plans (mutable contents are
     # fine on a frozen dataclass; keyed by window length l)
@@ -243,6 +254,32 @@ class GrammarBatch:
                 object.__setattr__(sharded, f.name, sharded._place(v))
         return sharded
 
+    def check_epochs(self, current: Sequence[int]) -> None:
+        """Raise :class:`StaleGrammarError` if any source corpus has moved
+        past the epoch this pack (and every lazy plan memoized on it) was
+        built from.
+
+        ``current`` is the live epoch per *real* row, in pack order (shard
+        padding rows duplicate a real grammar and are never surfaced, so
+        only the real prefix is compared).  Packs without epoch stamps
+        (``epochs is None`` — built from bare immutable arrays) pass
+        trivially.  The serving layer re-packs instead of raising; this is
+        the backstop for any caller that skips that refresh.
+        """
+        if self.epochs is None:
+            return
+        cur = tuple(int(e) for e in current)
+        if len(cur) > len(self.epochs):
+            raise StaleGrammarError(
+                f"epoch check over {len(cur)} corpora against a pack "
+                f"stamped with {len(self.epochs)}")
+        for i, (have, now) in enumerate(zip(self.epochs, cur)):
+            if have != now:
+                raise StaleGrammarError(
+                    f"pack row {i} was built at corpus epoch {have} but "
+                    f"the corpus is now at epoch {now} — re-pack before "
+                    f"serving (the corpus absorbed appended files)")
+
     @property
     def total_edges(self) -> int:
         """True (unpadded) edge count across the batch (memoized: the
@@ -291,10 +328,16 @@ class GrammarBatch:
     # ------------------------------------------------------------ build --
     @classmethod
     def build(cls, gas: Sequence[GrammarArrays],
-              bucket: bool = True) -> "GrammarBatch":
+              bucket: bool = True,
+              epochs: Optional[Sequence[int]] = None) -> "GrammarBatch":
         if not gas:
             raise ValueError("GrammarBatch needs at least one corpus")
         gas = tuple(gas)
+        if epochs is not None:
+            epochs = tuple(int(e) for e in epochs)
+            if len(epochs) != len(gas):
+                raise ValueError(f"epochs stamps {len(epochs)} corpora but "
+                                 f"the pack holds {len(gas)}")
         rnd = _round_up_pow2 if bucket else (lambda x, minimum=1:
                                              max(int(x), minimum))
         R_pad = rnd(max(ga.num_rules for ga in gas))
@@ -348,6 +391,7 @@ class GrammarBatch:
 
         return cls(
             gas=gas,
+            epochs=epochs,
             R_pad=R_pad, E_pad=E_pad, T_pad=T_pad, F_pad=F_pad,
             V_pad=V_pad, Tf_pad=Tf_pad,
             num_rules=np.array([ga.num_rules for ga in gas]),

@@ -30,6 +30,17 @@ import numpy as np
 from .sequitur import Grammar
 
 
+class StaleGrammarError(RuntimeError):
+    """A derived artifact (memoized weights, a pack, a plan) was produced
+    at an earlier corpus epoch than the grammar it is about to serve.
+
+    Raised by the epoch guards on :class:`repro.data.store.CompressedCorpus`
+    and :meth:`repro.core.batch.GrammarBatch.check_epochs` — the ingest
+    tier's contract that a mutated corpus can never be served from stale
+    caches (the serving layer catches the mismatch earlier and re-packs;
+    this exception is the backstop that makes skipping that check loud)."""
+
+
 def pow2_bucket(x: int) -> int:
     """Smallest power of two >= max(x, 1): the ELL plan-width bucketing
     (shared with core/batch.py so batch packs agree on K; semantically

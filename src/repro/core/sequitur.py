@@ -64,21 +64,38 @@ class Grammar:
         return len(self.rules)
 
     def expand(self, rule_id: int = 0, _memo: Dict[int, np.ndarray] | None = None) -> np.ndarray:
-        """Decompress a rule to its terminal sequence (oracle for tests)."""
+        """Decompress a rule to its terminal sequence (oracle for tests).
+
+        Explicit-stack iterative: a chain grammar R0 -> R1 -> ... -> Rn is
+        only log-deep when Sequitur built it, but nothing stops a caller
+        (or a future parallel constructor) from handing this a chain deeper
+        than Python's recursion limit — the recursive form died there.
+        """
         if _memo is None:
             _memo = {}
-        if rule_id in _memo:
-            return _memo[rule_id]
-        out: List[np.ndarray] = []
-        for s in self.rules[rule_id]:
-            s = int(s)
-            if s < self.num_terminals:
-                out.append(np.array([s], dtype=np.int64))
-            else:
-                out.append(self.expand(s - self.num_terminals, _memo))
-        res = np.concatenate(out) if out else np.zeros(0, dtype=np.int64)
-        _memo[rule_id] = res
-        return res
+        nt = self.num_terminals
+        stack: List[int] = [rule_id]
+        while stack:
+            r = stack[-1]
+            if r in _memo:
+                stack.pop()
+                continue
+            missing = [int(s) - nt for s in self.rules[r]
+                       if int(s) >= nt and (int(s) - nt) not in _memo]
+            if missing:
+                stack.extend(missing)
+                continue
+            out: List[np.ndarray] = []
+            for s in self.rules[r]:
+                s = int(s)
+                if s < nt:
+                    out.append(np.array([s], dtype=np.int64))
+                else:
+                    out.append(_memo[s - nt])
+            _memo[r] = (np.concatenate(out) if out
+                        else np.zeros(0, dtype=np.int64))
+            stack.pop()
+        return _memo[rule_id]
 
 
 class _Sequitur:
@@ -307,6 +324,75 @@ def compress(tokens: Sequence[int] | np.ndarray, num_terminals: int) -> Grammar:
     return sq.export(num_terminals)
 
 
+class IncrementalSequitur:
+    """Live multi-file Sequitur state that absorbs appended files.
+
+    Sequitur is an *online* algorithm: the grammar after consuming a stream
+    depends only on the stream prefix, never on what follows.  Keeping the
+    node store alive between files therefore makes multi-file compression
+    incremental for free — appending file k+1 to a state that already
+    consumed files 0..k performs exactly the operations a from-scratch run
+    over all k+2 files would, so the resulting grammar is *identical*, not
+    merely equivalent (tests/test_ingest.py holds this to bit-equality).
+
+    Two properties make the append safe at file boundaries:
+
+    * each file ends in a globally unique splitter terminal
+      (``vocab_size + file_index``) that can never form a repeated digram,
+      so no rule ever spans two files and appending cannot perturb digram
+      uniqueness across the boundary;
+    * rule symbols are stored as negative node values internally, so
+      :meth:`export` can be re-invoked with a *larger* ``num_terminals``
+      as files (and their splitter ids) accrue — export is read-only.
+    """
+
+    __slots__ = ("vocab_size", "n_files", "_sq")
+
+    def __init__(self, vocab_size: int):
+        if vocab_size < 1:
+            raise ValueError(f"vocab_size must be >= 1, got {vocab_size}")
+        self.vocab_size = int(vocab_size)
+        self.n_files = 0
+        self._sq = _Sequitur()
+        root = self._sq.new_rule()
+        assert root == 0
+
+    @property
+    def num_terminals(self) -> int:
+        """Words ++ splitters: ``[0, vocab_size + n_files)``."""
+        return self.vocab_size + self.n_files
+
+    def append_file(self, tokens: Sequence[int] | np.ndarray) -> None:
+        """Feed one file's word tokens, then its unique splitter.
+
+        Word tokens must be in ``[0, vocab_size)`` — a word colliding with
+        a splitter id would corrupt per-file ownership, so this validates
+        strictly against the word range (empty files are fine: they
+        contribute just their splitter)."""
+        toks = np.asarray(tokens, dtype=np.int64)
+        if toks.ndim != 1:
+            raise ValueError(f"file must be a 1-D token array, "
+                             f"got shape {toks.shape}")
+        if toks.size and not (0 <= int(toks.min())
+                              and int(toks.max()) < self.vocab_size):
+            bad = toks[(toks < 0) | (toks >= self.vocab_size)][0]
+            raise ValueError(f"token {int(bad)} outside word range "
+                             f"[0, {self.vocab_size})")
+        for t in toks:
+            self._sq.append(0, int(t))
+        self._sq.append(0, self.vocab_size + self.n_files)
+        self.n_files += 1
+
+    def append_files(self, files: Sequence[np.ndarray]) -> None:
+        for f in files:
+            self.append_file(f)
+
+    def export(self) -> Grammar:
+        """Snapshot the current grammar (read-only; callable after every
+        append — the live state is untouched)."""
+        return self._sq.export(self.num_terminals)
+
+
 def compress_files(
     files: Sequence[np.ndarray], vocab_size: int
 ) -> Tuple[Grammar, int]:
@@ -316,12 +402,11 @@ def compress_files(
     file boundaries.  Terminal id space becomes
     ``[0, vocab_size)`` words ++ ``[vocab_size, vocab_size + n_files)``
     splitters.  Returns (grammar, num_files).
+
+    Implemented on :class:`IncrementalSequitur` (one-shot build and
+    streaming append are the same code path, so "incremental ==
+    from-scratch" is structural, not coincidental).
     """
-    n_files = len(files)
-    parts: List[np.ndarray] = []
-    for i, f in enumerate(files):
-        parts.append(np.asarray(f, dtype=np.int64))
-        parts.append(np.array([vocab_size + i], dtype=np.int64))
-    stream = np.concatenate(parts) if parts else np.zeros(0, dtype=np.int64)
-    g = compress(stream, vocab_size + n_files)
-    return g, n_files
+    inc = IncrementalSequitur(vocab_size)
+    inc.append_files(files)
+    return inc.export(), inc.n_files

@@ -4,6 +4,17 @@ The corpus is stored *compressed* (the grammar), never as raw tokens.  The
 training pipeline and the analytics engine both read this store; analytics
 never decompress, batches are produced by window expansion (grammar.py
 ``expand_range``).
+
+Ingestion tier: a corpus is *mutable* through :meth:`CompressedCorpus.
+append_files` — Sequitur is online, so appended files extend the live
+grammar without recompressing what is already stored, and the result is
+bit-identical to a from-scratch build of the concatenated file list
+(tests/test_ingest.py).  Every mutation bumps the monotonically-increasing
+``epoch``; every derived memo on the store (traversal weights, the search
+index) is stamped with the epoch it was computed at and self-invalidates
+on mismatch, and downstream pack caches (serving/analytics_server.py,
+core/batch.py ``GrammarBatch.check_epochs``) use the same stamp so a stale
+grammar can never be served.
 """
 
 from __future__ import annotations
@@ -12,14 +23,16 @@ import dataclasses
 import json
 import os
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core import GrammarArrays, compress_files, flatten
-from repro.core.grammar import expand_range
+from repro.core import GrammarArrays, IncrementalSequitur, flatten
+from repro.core.grammar import StaleGrammarError, expand_range
 from repro.core.traversal import per_file_weights as _per_file_weights
 from repro.core.traversal import top_down_weights as _top_down_weights
+
+__all__ = ["CompressedCorpus", "StaleGrammarError"]
 
 
 _META_FIELDS = ("vocab_size", "num_files", "num_rules", "num_levels")
@@ -38,22 +51,94 @@ class CompressedCorpus:
     ga: GrammarArrays
     file_starts: np.ndarray     # [F] global terminal offset of each file
     file_lens: np.ndarray       # [F]
-    # memoized traversal weights: corpora are immutable once built, so the
-    # serving layer reuses one traversal across any number of queries
+    # ingest-tier mutation counter: bumped by every append_files.  All
+    # derived memos — the weight/index cache below, server pack caches,
+    # GrammarBatch plans — carry the epoch they were computed at; a
+    # mismatch means the grammar changed underneath them.
+    epoch: int = 0
+    # memoized traversal weights, entries stored as (epoch, value): the
+    # serving layer reuses one traversal across any number of queries, and
+    # the epoch stamp makes a post-append stale hit structurally
+    # impossible (checked on every read, not just cleared on append)
     _weights_cache: Dict = field(default_factory=dict, repr=False,
                                  compare=False)
+    # live Sequitur state backing append_files.  build() keeps it; a
+    # corpus loaded from disk reconstructs it lazily on first append by
+    # replaying the stored stream (Sequitur is online, so the replayed
+    # state is bit-identical to the one the original build held).
+    _sq: Optional[IncrementalSequitur] = field(default=None, repr=False,
+                                               compare=False)
 
     # ------------------------------------------------------------ build --
     @classmethod
     def build(cls, files: List[np.ndarray], vocab_size: int
               ) -> "CompressedCorpus":
-        g, nf = compress_files(files, vocab_size)
-        ga = flatten(g, vocab_size, nf)
+        inc = IncrementalSequitur(vocab_size)
+        inc.append_files(files)
+        ga = flatten(inc.export(), vocab_size, inc.n_files)
         lens = np.array([len(f) for f in files], np.int64)
         # +1 per preceding splitter
-        starts = np.zeros(nf, np.int64)
+        starts = np.zeros(inc.n_files, np.int64)
         np.cumsum(lens[:-1] + 1, out=starts[1:])
-        return cls(ga=ga, file_starts=starts, file_lens=lens)
+        return cls(ga=ga, file_starts=starts, file_lens=lens, _sq=inc)
+
+    # ----------------------------------------------------------- ingest --
+    def _live_sequitur(self) -> IncrementalSequitur:
+        """The live compressor state.  After :meth:`load` (no state on
+        disk) it is rebuilt by replaying every stored file through a fresh
+        :class:`IncrementalSequitur` — the same operation sequence the
+        original build ran, so the reconstructed state (and any grammar
+        appended onto it) stays bit-identical to never having snapshotted
+        at all.  Cost: one full decompression + recompression; paid once,
+        only by stores that resume ingesting after a restore."""
+        if self._sq is None:
+            inc = IncrementalSequitur(int(self.ga.vocab_size))
+            for fid in range(len(self.file_lens)):
+                inc.append_file(self.window(fid, 0,
+                                            int(self.file_lens[fid])))
+            self._sq = inc
+        return self._sq
+
+    def append_files(self, files: Sequence[np.ndarray]
+                     ) -> "CompressedCorpus":
+        """Absorb ``files`` into the live grammar (incremental Sequitur).
+
+        New files are appended to the root rule behind fresh unique
+        splitter symbols; digram uniqueness and rule utility are
+        maintained online by the same machinery the from-scratch build
+        runs, so the re-exported arrays are bit-identical to
+        ``CompressedCorpus.build(old_files + files)``.  Bumps ``epoch``
+        (invalidating every derived memo) and returns ``self``.  An empty
+        ``files`` list is a no-op and does NOT bump the epoch.
+        """
+        files = [np.asarray(f, np.int64) for f in files]
+        if not files:
+            return self
+        inc = self._live_sequitur()
+        inc.append_files(files)
+        self.ga = flatten(inc.export(), inc.vocab_size, inc.n_files)
+        lens = np.array([len(f) for f in files], np.int64)
+        prev_end = (int(self.file_starts[-1]) + int(self.file_lens[-1]) + 1
+                    if len(self.file_lens) else 0)
+        starts = prev_end + np.concatenate(
+            [np.zeros(1, np.int64), np.cumsum(lens[:-1] + 1)])
+        self.file_starts = np.concatenate(
+            [self.file_starts.astype(np.int64), starts])
+        self.file_lens = np.concatenate(
+            [self.file_lens.astype(np.int64), lens])
+        self.epoch += 1
+        self._weights_cache.clear()
+        return self
+
+    def check_epoch(self, epoch: int) -> None:
+        """Raise :class:`StaleGrammarError` unless ``epoch`` is current —
+        the guard derived artifacts (packs, plans, external indexes) call
+        before serving on behalf of this corpus."""
+        if int(epoch) != self.epoch:
+            raise StaleGrammarError(
+                f"corpus is at epoch {self.epoch} but the derived artifact "
+                f"was built at epoch {int(epoch)} — rebuild it "
+                f"(append_files mutated the grammar)")
 
     # --------------------------------------------------------------- io --
     def save(self, path: str) -> None:
@@ -61,6 +146,11 @@ class CompressedCorpus:
         arrays["file_starts"] = self.file_starts
         arrays["file_lens"] = self.file_lens
         meta = {name: int(getattr(self.ga, name)) for name in _META_FIELDS}
+        # corpus-level (non-GrammarArrays) metadata rides the same JSON
+        # blob under a reserved key: a snapshot taken mid-ingest restores
+        # at the same epoch, so artifacts derived pre-snapshot stay
+        # distinguishable from post-restore ones
+        meta["_corpus_epoch"] = int(self.epoch)
         tmp = path + ".tmp.npz"
         np.savez_compressed(tmp, _meta=json.dumps(meta), **arrays)
         os.replace(tmp, path)  # atomic publish (checkpointing convention)
@@ -69,11 +159,12 @@ class CompressedCorpus:
     def load(cls, path: str) -> "CompressedCorpus":
         z = np.load(path, allow_pickle=False)
         meta = json.loads(str(z["_meta"]))
+        epoch = int(meta.pop("_corpus_epoch", 0))   # pre-ingest snapshots
         kw = {name: z[name] for name in _ARRAY_FIELDS}
         kw.update(meta)
         ga = GrammarArrays(**kw)
         return cls(ga=ga, file_starts=z["file_starts"],
-                   file_lens=z["file_lens"])
+                   file_lens=z["file_lens"], epoch=epoch)
 
     # ------------------------------------------------------------ reads --
     @property
@@ -116,21 +207,29 @@ class CompressedCorpus:
         return expand_range(self.ga, offset, min(length, total - offset))
 
     # ------------------------------------------------- memoized traversal --
+    def _memo(self, key, build: Callable[[], object]):
+        """Epoch-stamped memo: entries are ``(epoch, value)`` and a hit
+        only counts when its stamp matches the current epoch.  A stale
+        entry (the grammar absorbed appended files after it was computed)
+        is recomputed in place — it can never be returned, even if a bug
+        elsewhere forgot to clear the cache on append
+        (tests/test_ingest.py plants a poisoned stale entry to prove it)."""
+        hit = self._weights_cache.get(key)
+        if hit is not None and hit[0] == self.epoch:
+            return hit[1]
+        value = build()
+        self._weights_cache[key] = (self.epoch, value)
+        return value
+
     def top_down_weights(self, method: str = "frontier"):
         """Per-rule occurrence weights, memoized (analytics reuse them)."""
-        key = ("top_down", method)
-        if key not in self._weights_cache:
-            self._weights_cache[key] = _top_down_weights(self.ga,
-                                                         method=method)
-        return self._weights_cache[key]
+        return self._memo(("top_down", method),
+                          lambda: _top_down_weights(self.ga, method=method))
 
     def per_file_weights(self, method: str = "frontier"):
         """Per-(rule, file) occurrence weights, memoized."""
-        key = ("per_file", method)
-        if key not in self._weights_cache:
-            self._weights_cache[key] = _per_file_weights(self.ga,
-                                                         method=method)
-        return self._weights_cache[key]
+        return self._memo(("per_file", method),
+                          lambda: _per_file_weights(self.ga, method=method))
 
     def search_index(self, method: str = "frontier"):
         """Per-corpus retrieval index (tf / doc lengths / doc frequencies /
@@ -138,11 +237,8 @@ class CompressedCorpus:
         the memoized per-file traversal with the per-file analytics.  Lazy
         import: the search package sits above the store in the layering."""
         from repro.search.index import base_method, build_search_index
-        key = ("search_index", base_method(method))
-        if key not in self._weights_cache:
-            self._weights_cache[key] = build_search_index(self,
-                                                          method=method)
-        return self._weights_cache[key]
+        return self._memo(("search_index", base_method(method)),
+                          lambda: build_search_index(self, method=method))
 
     def cached_weight_keys(self):
         return tuple(sorted(self._weights_cache))
@@ -152,6 +248,7 @@ class CompressedCorpus:
 
     def stats(self) -> dict:
         return {
+            "epoch": int(self.epoch),
             "files": int(self.ga.num_files),
             "rules": int(self.ga.num_rules),
             "vocab": int(self.ga.vocab_size),

@@ -113,7 +113,8 @@ def pad_corpora(gas: Sequence[GrammarArrays], multiple: int
 
 
 def shard_batch(gas: Sequence[GrammarArrays], mesh: Optional[Mesh] = None,
-                bucket: bool = True) -> GrammarBatch:
+                bucket: bool = True,
+                epochs: Optional[Sequence[int]] = None) -> GrammarBatch:
     """Pack ``gas`` and shard the pack row-wise across ``mesh``.
 
     ``mesh=None`` auto-detects (:func:`corpus_mesh`); if that still yields
@@ -122,13 +123,27 @@ def shard_batch(gas: Sequence[GrammarArrays], mesh: Optional[Mesh] = None,
     mesh multiple (:func:`pad_corpora`); ragged shard counts (N not
     divisible by devices) and N < devices are both handled by that
     padding.
+
+    ``epochs`` (one per corpus in ``gas``) stamps the pack for the ingest
+    tier's staleness guard (:meth:`GrammarBatch.check_epochs`); padding
+    rows inherit the epoch of the real grammar they duplicate.
     """
+    gas = list(gas)
+    if epochs is not None and len(epochs) != len(gas):
+        raise ValueError(f"epochs stamps {len(epochs)} corpora but "
+                         f"{len(gas)} were passed")
     if mesh is None:
         mesh = corpus_mesh()
     if mesh is None:
-        return GrammarBatch.build(gas, bucket=bucket)
+        return GrammarBatch.build(gas, bucket=bucket, epochs=epochs)
     padded, n_real = pad_corpora(gas, mesh_size(mesh))
-    gb = GrammarBatch.build(padded, bucket=bucket)
+    if epochs is not None:
+        # padding repeats a grammar object from gas; match by identity
+        # (GrammarArrays __eq__ compares arrays elementwise and would raise)
+        epochs = tuple(epochs) + tuple(
+            next(e for g, e in zip(gas, epochs) if g is pad)
+            for pad in padded[n_real:])
+    gb = GrammarBatch.build(padded, bucket=bucket, epochs=epochs)
     return gb.shard(mesh, n_real=n_real)
 
 

@@ -142,6 +142,12 @@ class ServerStats:
     # every downgrade lands here (core.batch.is_segment_sum_fallback).
     method_fallbacks: Dict[str, int] = field(default_factory=dict)
 
+    # ----- ingest-tier epoch guard counters -----
+    # packs dropped + corpora re-snapshotted because a registered store's
+    # epoch moved (CompressedCorpus.append_files); each count is one
+    # "stale grammar could NOT be served" event
+    epoch_invalidations: int = 0
+
     # ----- async queue counters (written by serving/queue.py) -----
     submitted: int = 0                 # queries entered through submit()
     flushes: Dict[str, int] = field(default_factory=dict)  # reason -> count
@@ -243,6 +249,9 @@ class AnalyticsServer:
                                   else shard_min_corpora)
         self._corpora: Dict[str, GrammarArrays] = {}
         self._stores: Dict[str, CompressedCorpus] = {}
+        # epoch each corpus's arrays snapshot was taken at (0 for bare
+        # GrammarArrays registrations, which are immutable)
+        self._epochs: Dict[str, int] = {}
         self._batches: Dict[Tuple, GrammarBatch] = {}
         self.stats = ServerStats()
 
@@ -260,8 +269,10 @@ class AnalyticsServer:
         if isinstance(corpus, CompressedCorpus):
             self._stores[name] = corpus
             self._corpora[name] = corpus.ga
+            self._epochs[name] = int(corpus.epoch)
         else:
             self._corpora[name] = corpus
+            self._epochs[name] = 0
         # packs that contained an older corpus under this name are stale
         # (cache keys are (names_tuple, shards))
         self._batches = {k: v for k, v in self._batches.items()
@@ -269,6 +280,26 @@ class AnalyticsServer:
 
     def corpora(self) -> Tuple[str, ...]:
         return tuple(self._corpora)
+
+    def refresh(self, name: str) -> bool:
+        """Re-snapshot ``name``'s arrays if its registered store mutated
+        (``CompressedCorpus.append_files`` bumped the epoch) since the last
+        snapshot; purges every cached pack containing the corpus.  Returns
+        True when a refresh happened.  Called on every validate and at the
+        top of every :meth:`execute_chunk` — an epoch-cheap int compare —
+        so neither the sync path nor an async flush whose corpus was
+        appended to *between submit and flush* can serve pre-append data
+        (the re-registration path: tests/test_ingest.py).
+        """
+        store = self._stores.get(name)
+        if store is None or store.epoch == self._epochs.get(name):
+            return False
+        self._corpora[name] = store.ga
+        self._epochs[name] = int(store.epoch)
+        self._batches = {key: gb for key, gb in self._batches.items()
+                         if name not in key[0]}
+        self.stats.epoch_invalidations += 1
+        return True
 
     def validate(self, q: Query) -> None:
         if q.kind not in SERVED_KINDS:
@@ -280,6 +311,7 @@ class AnalyticsServer:
                 raise ValueError(f"search top-k must be >= 1, got {q.k}")
         if q.corpus not in self._corpora:
             raise KeyError(f"corpus {q.corpus!r} not registered")
+        self.refresh(q.corpus)
 
     def size_bucket(self, name: str) -> int:
         """Grammar-size bucket of a registered corpus (power-of-two rule
@@ -451,6 +483,10 @@ class AnalyticsServer:
         remain bit-identical to the single-device pack.
         """
         self._check_chunk_params(kind, l, terms, k)
+        # flush-time freshness: a store appended to after its queries were
+        # validated/grouped must still be served post-append data
+        for name in chunk:
+            self.refresh(name)
         shards = self.shard_count(len(chunk))
         if len(chunk) > self.max_batch * max(shards, 1):
             raise ValueError(f"chunk of {len(chunk)} exceeds "
@@ -494,17 +530,27 @@ class AnalyticsServer:
     def _get_batch(self, names: Sequence[str],
                    shards: int = 1) -> GrammarBatch:
         key = (tuple(names), shards)
+        epochs = tuple(self._epochs.get(n, 0) for n in names)
         gb = self._batches.get(key)
         if gb is not None:
-            self.stats.batch_cache_hits += 1
-            return gb
+            # belt-and-braces: refresh() already purges packs when a store
+            # mutates, but an epoch-stamped hit is re-verified anyway so a
+            # stale pack cannot serve even if a future code path forgets
+            # the refresh (the raising guard is GrammarBatch.check_epochs;
+            # tests monkeypatch refresh away to prove this layer fires)
+            if gb.epochs == epochs or gb.epochs is None:
+                self.stats.batch_cache_hits += 1
+                return gb
+            del self._batches[key]
+            self.stats.epoch_invalidations += 1
         gas = [self._corpora[n] for n in names]
         if shards > 1:
             # shards > 1 implies shards == mesh_size(self.mesh): the pad +
             # build + shard recipe is the library's, in one place
-            gb = shard_batch(gas, self.mesh, bucket=self.bucket)
+            gb = shard_batch(gas, self.mesh, bucket=self.bucket,
+                             epochs=epochs)
         else:
-            gb = GrammarBatch.build(gas, bucket=self.bucket)
+            gb = GrammarBatch.build(gas, bucket=self.bucket, epochs=epochs)
         while len(self._batches) >= self.max_cached_batches:
             self._batches.pop(next(iter(self._batches)))   # FIFO eviction
         self._batches[key] = gb

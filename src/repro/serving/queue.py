@@ -54,6 +54,14 @@ Because flushes call the same ``run_group`` / ``execute_chunk`` core as the
 sync path, results are bit-identical to a one-shot ``AnalyticsServer.run``
 of the same queries (tests/test_queue.py fuzzes exactly that).
 
+Ingest freshness: a query can sit in the pending queue while its
+registered :class:`~repro.data.store.CompressedCorpus` absorbs appended
+files (``append_files`` bumps the store epoch).  Flushes stay fresh
+because ``execute_chunk`` re-snapshots every mutated corpus at flush time
+(``AnalyticsServer.refresh``, the re-registration path) before packing —
+so a submit-append-drain sequence serves post-append data, never the
+grammar that was current at submit time (tests/test_ingest.py).
+
 Device-sharded flushes: ``target_shards`` > 1 asks the engine to split
 large flushes row-wise across the corpus mesh instead of serializing
 ``max_batch``-sized chunks — one flush of up to ``max_batch *
@@ -374,6 +382,9 @@ class AsyncAnalyticsServer:
                 names.append(p.query.corpus)
         if live:
             try:
+                # run_group -> execute_chunk refreshes every name against
+                # its store's current epoch before packing, so queries that
+                # queued before an append_files still serve fresh data
                 with self._exec_lock:
                     by_corpus = self._engine.run_group(
                         g.kind, names, l=g.l, terms=g.terms, k=g.k,

@@ -1,0 +1,193 @@
+"""Sequitur invariant checkers for the streaming ingestion tests.
+
+The live :class:`~repro.core.sequitur.IncrementalSequitur` state must hold
+the two classic Sequitur invariants *at every moment between appends* —
+that is what makes incremental ingestion sound:
+
+  * digram uniqueness — no pair of adjacent symbols occurs more than once
+    in the grammar (the only tolerated exception: an odd-length run like
+    ``aaa`` holds two *overlapping* occurrences of ``(a, a)``, which the
+    algorithm deliberately leaves alone);
+  * rule utility — enforced lazily by the implementation, so on the LIVE
+    state we check refcount *consistency* (the tracked refcount equals the
+    number of occurrences), and the >= 2 utility on the EXPORTED grammar,
+    where single-use rules have been inlined away.
+
+On top of those, structural health: doubly-linked-list integrity, the
+digram index maps exactly the digrams present, no rule other than the
+root contains a file splitter (rules never span files), and the exported
+grammar expands losslessly back to the original token stream.
+
+These checkers reach into ``_Sequitur`` internals on purpose — they are
+the test-side mirror of the data structure, kept separate from the
+implementation so a bug cannot hide in shared code.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.sequitur import (GUARD, Grammar, IncrementalSequitur,
+                                 _is_rule, _sym_rule)
+
+
+def body_nodes(sq, rid: int) -> List[int]:
+    """Node indices of rule ``rid``'s body, in order (guard excluded)."""
+    g = sq.rule_guard[rid]
+    nodes: List[int] = []
+    n = sq.nxt[g]
+    steps = 0
+    while not sq._is_guard(n):
+        nodes.append(n)
+        n = sq.nxt[n]
+        steps += 1
+        assert steps <= len(sq.val), \
+            f"rule {rid} body does not terminate (cycle outside the guard)"
+    return nodes
+
+
+def check_list_integrity(sq) -> None:
+    """Every rule body is a well-formed circular doubly-linked list and no
+    node is reachable from two places."""
+    seen: Dict[int, int] = {}
+    for rid in sq.rule_guard:
+        g = sq.rule_guard[rid]
+        assert sq.val[g] <= GUARD, f"rule {rid} guard has non-guard value"
+        for n in [g] + body_nodes(sq, rid):
+            assert sq.prv[sq.nxt[n]] == n, \
+                f"broken link at node {n} (rule {rid}): prv(nxt(n)) != n"
+            assert sq.nxt[sq.prv[n]] == n, \
+                f"broken link at node {n} (rule {rid}): nxt(prv(n)) != n"
+            assert n not in seen, \
+                f"node {n} reachable from rules {seen[n]} and {rid}"
+            seen[n] = rid
+    for n in sq.free:
+        assert n not in seen, f"freed node {n} still reachable (rule {seen[n]})"
+
+
+def _digram_occurrences(sq) -> Dict[Tuple[int, int], List[Tuple[int, int, int]]]:
+    """digram value-pair -> [(rule, position, node)] over every live body."""
+    occ: Dict[Tuple[int, int], List[Tuple[int, int, int]]] = {}
+    for rid in sq.rule_guard:
+        nodes = body_nodes(sq, rid)
+        for i in range(len(nodes) - 1):
+            d = (sq.val[nodes[i]], sq.val[nodes[i + 1]])
+            occ.setdefault(d, []).append((rid, i, nodes[i]))
+    return occ
+
+
+def check_digram_uniqueness(sq) -> None:
+    """No digram occurs twice — except overlapping same-symbol runs
+    (``aaa``), which must be consecutive positions of ONE rule."""
+    for d, occs in _digram_occurrences(sq).items():
+        if len(occs) == 1:
+            continue
+        a, b = d
+        assert a == b, \
+            f"digram {d} occurs {len(occs)} times at {occs[:4]}"
+        rids = {rid for rid, _, _ in occs}
+        assert len(rids) == 1, \
+            f"overlapping digram {d} spans rules {sorted(rids)}"
+        positions = sorted(i for _, i, _ in occs)
+        assert positions == list(range(positions[0],
+                                       positions[0] + len(positions))), \
+            f"digram {d} occurrences {positions} are not one contiguous run"
+
+
+def check_digram_index(sq) -> None:
+    """The index maps exactly the digrams present: every entry points at a
+    live occurrence of its key, and every digram in the grammar is
+    indexed (at one of its occurrences)."""
+    occ = _digram_occurrences(sq)
+    for d, n in sq.digrams.items():
+        assert d in occ, f"index entry {d} -> node {n} but digram is gone"
+        assert n in [node for _, _, node in occ[d]], \
+            f"index entry {d} -> node {n} is not an occurrence " \
+            f"(live ones: {occ[d]})"
+    for d in occ:
+        assert d in sq.digrams, f"digram {d} at {occ[d]} is unindexed"
+
+
+def check_refcounts(sq) -> None:
+    """Tracked refcounts equal actual occurrence counts (the export-time
+    utility decision — inline vs keep — reads these)."""
+    counts = {rid: 0 for rid in sq.rule_guard}
+    for rid in sq.rule_guard:
+        for n in body_nodes(sq, rid):
+            v = sq.val[n]
+            if _is_rule(v):
+                counts[_sym_rule(v)] += 1
+    for rid, want in counts.items():
+        have = sq.rule_ref.get(rid, 0)
+        assert have == want, \
+            f"rule {rid} refcount {have} but {want} occurrence(s)"
+    assert counts.get(0, 0) == 0, "the root rule must never be referenced"
+
+
+def check_splitters_only_in_root(inc: IncrementalSequitur) -> None:
+    """Splitter terminals are globally unique, so no rule may ever absorb
+    one — rules never span file boundaries."""
+    sq = inc._sq
+    for rid in sq.rule_guard:
+        if rid == 0:
+            continue
+        for n in body_nodes(sq, rid):
+            v = sq.val[n]
+            assert not (v >= inc.vocab_size), \
+                f"rule {rid} contains splitter terminal {v} " \
+                f"(vocab_size={inc.vocab_size}) — a rule spans files"
+
+
+def check_exported_utility(g: Grammar) -> None:
+    """Every exported non-root rule is referenced >= 2 times (single-use
+    rules must have been inlined away at export)."""
+    refs = {r: 0 for r in range(g.num_rules)}
+    for body in g.rules:
+        for s in body:
+            s = int(s)
+            if s >= g.num_terminals:
+                refs[s - g.num_terminals] += 1
+    assert refs[0] == 0, "exported root rule is referenced"
+    for r in range(1, g.num_rules):
+        assert refs[r] >= 2, \
+            f"exported rule {r} has utility {refs[r]} < 2"
+
+
+def expected_stream(files: Sequence[np.ndarray], vocab_size: int
+                    ) -> np.ndarray:
+    """The concatenated terminal stream: each file followed by its unique
+    splitter ``vocab_size + file_index``."""
+    parts: List[np.ndarray] = []
+    for i, f in enumerate(files):
+        parts.append(np.asarray(f, np.int64))
+        parts.append(np.array([vocab_size + i], np.int64))
+    return (np.concatenate(parts) if parts else np.zeros(0, np.int64))
+
+
+def check_roundtrip(g: Grammar, files: Sequence[np.ndarray],
+                    vocab_size: int) -> None:
+    """Lossless: expanding the exported root reproduces every appended
+    token (with splitters interleaved) exactly."""
+    got = g.expand(0) if g.num_rules else np.zeros(0, np.int64)
+    want = expected_stream(files, vocab_size)
+    assert got.shape == want.shape and bool(np.array_equal(got, want)), \
+        f"round-trip mismatch: expanded {got.shape[0]} tokens, " \
+        f"expected {want.shape[0]}"
+
+
+def check_all(inc: IncrementalSequitur,
+              files: Sequence[np.ndarray]) -> None:
+    """Every invariant, on the live state AND on a fresh export.  Called
+    after every single append in the property suite, so a violation is
+    pinned to the exact append that introduced it."""
+    sq = inc._sq
+    check_list_integrity(sq)
+    check_digram_uniqueness(sq)
+    check_digram_index(sq)
+    check_refcounts(sq)
+    check_splitters_only_in_root(inc)
+    g = inc.export()
+    check_exported_utility(g)
+    check_roundtrip(g, files, inc.vocab_size)

@@ -16,7 +16,11 @@ Asserts (exit code is the test result):
   5. search: BM25/TF-IDF top-k through the sharded pack (per-shard
      scoring + top-k, host merge) bit-equal to the decompress-then-scan
      oracle and the single-device batched path on the same ragged shard
-     counts, including the sharded server mode.
+     counts, including the sharded server mode;
+  6. ingest: corpora grown by CompressedCorpus.append_files, run through
+     the sharded pack (epoch stamps padded across shard-padding rows),
+     bit-equal to from-scratch rebuilds of the concatenated files AND a
+     sharded server serves post-append data after a mid-traffic append.
 """
 
 import os
@@ -186,10 +190,62 @@ def test_sharded_search_matches_oracle_and_single_device():
     print("sharded search == oracle == single-device OK")
 
 
+def test_sharded_ingest_appended_equals_rebuilt():
+    from repro.data import CompressedCorpus
+
+    mesh = corpus_mesh()
+    stores, rebuilt = [], []
+    for _ in range(5):                   # N=5 < 8 devices: padding + epochs
+        vocab = int(rng.integers(25, 60))
+        base = [rng.integers(0, vocab, int(rng.integers(60, 150)))
+                for _ in range(2)]
+        tail = [rng.integers(0, vocab, int(rng.integers(60, 150)))
+                for _ in range(int(rng.integers(1, 3)))]
+        stores.append(CompressedCorpus.build(base, vocab).append_files(tail))
+        rebuilt.append(CompressedCorpus.build(base + tail, vocab))
+    gas_a = [c.ga for c in stores]
+    gas_r = [c.ga for c in rebuilt]
+    # the epoch stamp survives shard padding (pad rows inherit their
+    # source row's epoch) and passes against the real-row prefix
+    gb = shard_batch(gas_a, mesh, epochs=[c.epoch for c in stores])
+    gb.check_epochs([c.epoch for c in stores])
+    for kind in ("word_count", "term_vector", "sequence_count"):
+        got = run_sharded(gas_a, kind, mesh=mesh)
+        want = run_sharded(gas_r, kind, mesh=mesh)
+        for i, (g_i, w_i) in enumerate(zip(got, want)):
+            results_equal(g_i, w_i, kind,
+                          f"(sharded appended vs rebuilt, corpus {i})")
+
+    # sharded server: append mid-traffic, the next sharded flush must
+    # serve post-append data (refresh + re-pack on the sharded path too)
+    srv = AnalyticsServer(max_batch=4, shard_min_corpora=2)
+    srv_ref = AnalyticsServer(max_batch=4, shard_min_corpora=2)
+    for i, (s, r) in enumerate(zip(stores, rebuilt)):
+        srv.register(f"i{i}", s)
+        srv_ref.register(f"i{i}", r)
+    qs = [Query(f"i{i}", "word_count") for i in range(5)]
+    srv.run(qs)                          # warm the sharded pack cache
+    extra = [rng.integers(0, stores[0].ga.vocab_size, 40)]
+    stores[0].append_files(extra)
+    rebuilt0 = CompressedCorpus.build(
+        [stores[0].window(f, 0, int(stores[0].file_lens[f]))
+         for f in range(len(stores[0].file_lens))],
+        int(stores[0].ga.vocab_size))
+    srv_ref.register("i0", rebuilt0)
+    got = srv.run(qs)
+    want = srv_ref.run(qs)
+    for g_i, w_i, q in zip(got, want, qs):
+        results_equal(g_i, w_i, q.kind,
+                      f"(sharded server post-append, {q.corpus})")
+    assert srv.stats.epoch_invalidations >= 1, srv.stats
+    print("sharded ingest: appended == rebuilt, post-append serving OK")
+
+
 if __name__ == "__main__":
     test_sharded_matches_oracle_and_single_device()
     test_shard_signature_reuse()
     test_server_sharded_equals_unsharded()
     test_queue_target_shards()
     test_sharded_search_matches_oracle_and_single_device()
+    test_sharded_ingest_appended_equals_rebuilt()
     print("SHARDED ALL OK")

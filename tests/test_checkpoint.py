@@ -1,5 +1,7 @@
-"""Checkpointing: roundtrip, atomicity, GC, elastic template restore."""
+"""Checkpointing: roundtrip, atomicity, GC, elastic template restore —
+plus mid-ingest CompressedCorpus snapshots (save_corpus/restore_corpus)."""
 
+import dataclasses
 import json
 import os
 
@@ -9,7 +11,9 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import (CheckpointManager, latest_step,
-                              restore_checkpoint, save_checkpoint)
+                              restore_checkpoint, restore_corpus,
+                              save_checkpoint, save_corpus)
+from repro.data import CompressedCorpus
 from repro.training import AdamW
 
 
@@ -67,3 +71,72 @@ def test_manager_every_n(tmp_path):
 def test_restore_missing_raises(tmp_path):
     with pytest.raises(FileNotFoundError):
         restore_checkpoint(str(tmp_path / "nope"), _tree())
+
+
+# -------------------------------------------- mid-ingest corpus snapshots --
+def _mk_corpus(rng, n_files=3, vocab=20):
+    phrase = rng.integers(0, vocab, 6)
+    files = [np.concatenate([np.tile(phrase, int(rng.integers(2, 5))),
+                             rng.integers(0, vocab, 15)])
+             for _ in range(n_files)]
+    return files, CompressedCorpus.build(files, vocab)
+
+
+def test_corpus_snapshot_roundtrip_mid_ingest(tmp_path, rng):
+    """A snapshot taken between appends restores every grammar array, the
+    file table, and the exact ingest epoch (exhaustive over the dataclass
+    fields — a new array field cannot silently skip the checkpoint)."""
+    files, corpus = _mk_corpus(rng)
+    tail, _ = _mk_corpus(rng, n_files=1)
+    corpus.append_files(tail[0:1])
+    assert corpus.epoch == 1
+    save_corpus(str(tmp_path), 42, corpus)
+    restored, step = restore_corpus(str(tmp_path))
+    assert step == 42 and restored.epoch == 1
+    for f in dataclasses.fields(type(corpus.ga)):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(corpus.ga, f.name)),
+            np.asarray(getattr(restored.ga, f.name)),
+            err_msg=f"GrammarArrays.{f.name} did not round-trip")
+    np.testing.assert_array_equal(corpus.file_starts, restored.file_starts)
+    np.testing.assert_array_equal(corpus.file_lens, restored.file_lens)
+
+
+def test_corpus_snapshot_restore_resumes_ingest(tmp_path, rng):
+    """Appending after a restore is bit-identical to never checkpointing
+    (the live Sequitur state is replayed), and derived memos start empty —
+    computed fresh, at the restored epoch."""
+    files, corpus = _mk_corpus(rng)
+    more, _ = _mk_corpus(rng, n_files=2)
+    save_corpus(str(tmp_path), 1, corpus)
+    restored, _ = restore_corpus(str(tmp_path))
+    assert restored.cached_weight_keys() == ()
+    corpus.append_files(more)
+    restored.append_files(more)
+    assert restored.epoch == corpus.epoch == 1
+    for f in dataclasses.fields(type(corpus.ga)):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(corpus.ga, f.name)),
+            np.asarray(getattr(restored.ga, f.name)),
+            err_msg=f"GrammarArrays.{f.name} diverged after resume")
+    np.testing.assert_array_equal(
+        np.asarray(corpus.top_down_weights()),
+        np.asarray(restored.top_down_weights()))
+
+
+def test_corpus_snapshot_wrong_kind_raises(tmp_path, rng):
+    save_checkpoint(str(tmp_path), 3, _tree())
+    with pytest.raises(ValueError, match="not a corpus snapshot"):
+        restore_corpus(str(tmp_path))
+
+
+def test_corpus_snapshot_keeps_latest(tmp_path, rng):
+    _, corpus = _mk_corpus(rng)
+    tail, _ = _mk_corpus(rng, n_files=1)
+    save_corpus(str(tmp_path), 1, corpus)
+    corpus.append_files(tail[0:1])
+    save_corpus(str(tmp_path), 2, corpus)
+    restored, step = restore_corpus(str(tmp_path))
+    assert step == 2 and restored.epoch == 1
+    old, step = restore_corpus(str(tmp_path), step=1)
+    assert step == 1 and old.epoch == 0

@@ -214,6 +214,92 @@ def test_sharded_search_rankings_match_oracle(seed):
 
 
 @settings(max_examples=4, deadline=None)
+@given(st.integers(0, 100_000))
+def test_appended_corpus_matches_rebuilt_and_oracle(seed):
+    """Streaming-ingest differential lane: a corpus grown by
+    ``append_files`` vs a from-scratch build of the concatenated file
+    list.  The grammars are bit-identical (tests/test_ingest.py), and
+    here the *engine outputs* are held to the same bar: all six analytics
+    and both search rankings (float32 scores included) bit-equal to the
+    rebuilt corpus AND to the decompress-then-scan oracle, on the
+    single-corpus and batched paths.  Packing appended + rebuilt into one
+    GrammarBatch also proves the appended arrays are first-class pack
+    citizens (identical padded rows, identical plans)."""
+    from repro.data import CompressedCorpus
+
+    rng = np.random.default_rng(seed)
+    vocab = int(rng.integers(8, 40))
+    base = make_repetitive_files(rng, vocab,
+                                 n_files=int(rng.integers(1, 4)))
+    tail = make_repetitive_files(rng, vocab,
+                                 n_files=int(rng.integers(1, 4)))
+    appended = CompressedCorpus.build(base, vocab).append_files(tail)
+    rebuilt = CompressedCorpus.build(base + tail, vocab)
+    ga_a, ga_r = appended.ga, rebuilt.ga
+    stream = full_stream(ga_a)
+    gb = GrammarBatch.build([ga_a, ga_r])
+    for kind in ANALYTICS_KINDS:
+        want = oracle(ga_r, kind, stream=stream)
+        assert_result_equal(_single(ga_a, kind), want, kind,
+                            f"(appended single, seed={seed})")
+        for method in ("frontier", "frontier_ell"):
+            got = run_batched(gb, kind, method=method, l=3)
+            assert_result_equal(got[0], want, kind,
+                                f"(appended batched {method}, seed={seed})")
+            assert_result_equal(got[1], want, kind,
+                                f"(rebuilt batched {method}, seed={seed})")
+    terms = _query_terms(rng, [ga_a])
+    k = int(rng.integers(1, 7))
+    for scheme in SEARCH_SCHEMES:
+        want = oracle_search(ga_r, terms, k=k, scheme=scheme,
+                             stream=stream)
+        assert_result_equal(
+            search_corpus(appended, terms, k=k, scheme=scheme), want,
+            f"search_{scheme}", f"(appended single, seed={seed})")
+        got = batched_search(gb, terms, k=k, scheme=scheme)
+        for i, g_i in enumerate(got):
+            assert_result_equal(g_i, want, f"search_{scheme}",
+                                f"(appended batched, row {i}, seed={seed})")
+
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs a multi-device mesh (CI multidevice lane "
+                           "forces 8 CPU host devices)")
+@settings(max_examples=2, deadline=None)
+@given(st.integers(0, 100_000))
+def test_appended_corpus_sharded_matches_oracle(seed):
+    """The appended corpus through the device-sharded path: a ragged pack
+    of appended corpora (N=3 over an 8-way mesh exercises padding) stays
+    bit-equal to the oracle on analytics and search."""
+    from repro.data import CompressedCorpus
+
+    rng = np.random.default_rng(seed)
+    corpora = []
+    for _ in range(3):
+        vocab = int(rng.integers(8, 30))
+        base = make_repetitive_files(rng, vocab, n_files=2)
+        tail = make_repetitive_files(rng, vocab,
+                                     n_files=int(rng.integers(1, 3)))
+        corpora.append(
+            CompressedCorpus.build(base, vocab).append_files(tail))
+    gas = [c.ga for c in corpora]
+    mesh = corpus_mesh()
+    for kind in ("word_count", "term_vector"):
+        wants = oracle_batch(gas, kind)
+        got = run_sharded(gas, kind, mesh=mesh)
+        for i, (g_i, w_i) in enumerate(zip(got, wants)):
+            assert_result_equal(g_i, w_i, kind,
+                                f"(appended sharded, corpus {i})")
+    terms = _query_terms(rng, gas)
+    for kind, scheme in (("search_bm25", "bm25"), ("search_tfidf", "tfidf")):
+        wants = [oracle_search(ga, terms, k=4, scheme=scheme) for ga in gas]
+        got = run_sharded(gas, kind, mesh=mesh, terms=terms, k=4)
+        for i, (g_i, w_i) in enumerate(zip(got, wants)):
+            assert_result_equal(g_i, w_i, kind,
+                                f"(appended sharded, corpus {i})")
+
+
+@settings(max_examples=4, deadline=None)
 @given(st.integers(2, 5), st.integers(0, 100_000))
 def test_sequence_count_window_lengths_match_oracle(l, seed):
     rng = np.random.default_rng(seed)
