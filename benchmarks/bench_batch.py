@@ -29,6 +29,13 @@ call per corpus (prebuilt SearchIndex each) vs ONE batched program over
 the whole pack — the retrieval analogue of the batched-vs-sequential
 analytics story (index builds excluded; both sides warmed).
 
+``query/<op>/{sequential,batched,speedup}`` rows time the composable
+query operators (repro/query): an AND/OR predicate filter, a term-set
+sum aggregation and a sequence-plan phrase count, each as one
+single-corpus engine call per corpus vs ONE jitted program over the
+pack (whose per-file stats and sequence plans are memoized on the pack,
+like recurring serving traffic).
+
 ``shard/*`` rows time the device-sharded pack (distributed/shard_batch.py)
 against the single-device pack on the same corpora: ``shard/<app>/single``
 vs ``shard/<app>/sharded`` plus a ``speedup`` row, and the ``devices``
@@ -63,6 +70,8 @@ from repro.core import (GrammarArrays, GrammarBatch, batched_term_vector,
                         batched_top_down_weights, batched_word_count,
                         compress_files, flatten, term_vector, word_count)
 from repro.distributed.shard_batch import corpus_mesh, mesh_size, shard_batch
+from repro.query import (agg_corpus, batched_agg, batched_filter,
+                         batched_phrase, filter_corpus, phrase_corpus)
 from repro.search import (batched_search, build_search_index,
                           search_index_topk)
 
@@ -283,6 +292,37 @@ def run(smoke: bool = False) -> dict:
         out["search"]["schemes"][scheme] = {
             "sequential_us": t_seq * 1e6, "batched_us": t_bat * 1e6,
             "speedup": s_speedup}
+
+    # ----- query operators: batched vs per-corpus sequential -------------
+    # sequential = the pre-batching story again: one single-corpus engine
+    # call per corpus, each re-traversing for its own stats; batched = ONE
+    # jitted program over the pack, whose per-file stats / sequence plans
+    # are memoized on the pack like recurring serving traffic.
+    qrng = np.random.default_rng(13)
+    pred = ("or", (("and", (("term", 3, 1), ("term", 7, 2))),
+                   ("term", 11, 1)))
+    agg_terms = tuple(int(t) for t in qrng.integers(0, 40, 6))
+    phrase = tuple(int(t) for t in qrng.integers(0, 40, 3))
+    out["query"] = {"n": n, "ops": {}}
+    for op, seq_fn, bat_fn in (
+            ("filter",
+             lambda: [filter_corpus(ga, pred) for ga in gas],
+             lambda: batched_filter(gb, pred)),
+            ("agg",
+             lambda: [agg_corpus(ga, agg_terms, "sum") for ga in gas],
+             lambda: batched_agg(gb, agg_terms, "sum")),
+            ("phrase",
+             lambda: [phrase_corpus(ga, phrase) for ga in gas],
+             lambda: batched_phrase(gb, phrase))):
+        t_seq = timeit(seq_fn, repeat=3, warmup=1)
+        t_bat = timeit(bat_fn, repeat=3, warmup=1)
+        q_speedup = t_seq / max(t_bat, 1e-12)
+        emit(f"query/{op}/sequential", t_seq, f"n={n}")
+        emit(f"query/{op}/batched", t_bat, f"n={n}")
+        emit(f"query/{op}/speedup", 0.0, f"{q_speedup:.2f}x")
+        out["query"]["ops"][op] = {
+            "sequential_us": t_seq * 1e6, "batched_us": t_bat * 1e6,
+            "speedup": q_speedup}
 
     # ----- device-sharded pack vs single-device pack (same corpora) -----
     mesh = corpus_mesh()

@@ -150,7 +150,8 @@ def shard_batch(gas: Sequence[GrammarArrays], mesh: Optional[Mesh] = None,
 def run_sharded(gas: Sequence[GrammarArrays], kind: str,
                 mesh: Optional[Mesh] = None, method: str = "frontier",
                 backend: str = "jnp", l: int = 3,
-                bucket: bool = True, terms=None, k: int = 10) -> List:
+                bucket: bool = True, terms=None, k: int = 10,
+                predicate=None, agg=None) -> List:
     """One-call sharded analytics: pad, pack, shard, run, unpad.
 
     Results align with ``gas`` and are bit-identical to
@@ -158,10 +159,12 @@ def run_sharded(gas: Sequence[GrammarArrays], kind: str,
     Besides the six analytics this also serves the retrieval kinds
     (``search_bm25`` / ``search_tfidf``, parameterized by ``terms``/``k``)
     through :func:`repro.search.engine.batched_search` — each shard ranks
-    its own corpus rows and the top-k merge happens on host.  For
-    recurring traffic prefer building the pack once via
-    :func:`shard_batch` (or the serving layer's pack cache) — this
-    convenience re-packs per call.
+    its own corpus rows and the top-k merge happens on host — and the
+    query-operator kinds (``filter_count`` / ``agg_terms`` /
+    ``phrase_count``, parameterized by ``predicate``/``terms``/``agg``)
+    through :func:`repro.query.engine.run_batched_query`.  For recurring
+    traffic prefer building the pack once via :func:`shard_batch` (or the
+    serving layer's pack cache) — this convenience re-packs per call.
     """
     gb = shard_batch(gas, mesh=mesh, bucket=bucket)
     if kind in ("search_bm25", "search_tfidf"):
@@ -170,4 +173,9 @@ def run_sharded(gas: Sequence[GrammarArrays], kind: str,
         from repro.search.scoring import KIND_SCHEME
         return batched_search(gb, terms, k=k, scheme=KIND_SCHEME[kind],
                               method=method)
+    if kind in ("filter_count", "agg_terms", "phrase_count"):
+        # lazy import: repro.query sits above this module in the layering
+        from repro.query.engine import run_batched_query
+        return run_batched_query(gb, kind, predicate=predicate,
+                                 terms=terms, agg=agg, method=method)
     return run_batched(gb, kind, method=method, backend=backend, l=l)

@@ -62,46 +62,65 @@ from repro.core.traversal import resolve_single_method
 from repro.data.store import CompressedCorpus
 from repro.distributed.shard_batch import (corpus_mesh, mesh_size,
                                            shard_batch)
+from repro.query.engine import (QUERY_KINDS, query_corpus,
+                                run_batched_query)
+from repro.query.ops import (normalize_agg, normalize_phrase,
+                             normalize_predicate)
 from repro.search.engine import batched_search, search_corpus
 from repro.search.index import base_method
 from repro.search.scoring import (DEFAULT_TOP_K, KIND_SCHEME, SEARCH_KINDS,
                                   normalize_terms)
 
-#: Everything the server accepts: the six analytics + ranked retrieval.
-SERVED_KINDS = ANALYTICS_KINDS + SEARCH_KINDS
+#: Everything the server accepts: the six analytics + ranked retrieval +
+#: the composable query operators (filter / aggregate / phrase).
+SERVED_KINDS = ANALYTICS_KINDS + SEARCH_KINDS + QUERY_KINDS
+
+#: Query-tier kinds whose ``terms`` field is live (the agg term set, the
+#: phrase token sequence).
+_TERM_QUERY_KINDS = ("agg_terms", "phrase_count")
 
 
 @dataclass(frozen=True)
 class Query:
-    """One analytics / search request against a registered corpus."""
+    """One analytics / search / query-operator request against a
+    registered corpus."""
     corpus: str
     kind: str                  # one of SERVED_KINDS
     l: int = 3                 # sequence_count only
-    terms: Optional[Tuple[int, ...]] = None   # search kinds only
+    terms: Optional[Tuple[int, ...]] = None   # search/agg_terms/phrase_count
     k: Optional[int] = None                   # search kinds only (top-k)
+    predicate: Optional[Tuple] = None         # filter_count only
+    agg: Optional[str] = None                 # agg_terms only (sum/max)
 
     def __post_init__(self):
         # keep the frozen dataclass hashable / group-keyable when callers
-        # pass a list of term ids
+        # pass a list of term ids or a list-shaped predicate tree
         if self.terms is not None and not isinstance(self.terms, tuple):
             object.__setattr__(self, "terms",
                                tuple(int(t) for t in self.terms))
+        if self.predicate is not None:
+            object.__setattr__(self, "predicate",
+                               normalize_predicate(self.predicate))
 
     def effective_l(self) -> Optional[int]:
         """``l`` is a sequence_count parameter ONLY: for every other kind it
         is normalized to ``None`` so it can neither split a group (two
         word_count queries with different ``l`` share one batched call) nor
         mis-share one (a sequence_count group always carries its real
-        ``l``)."""
+        ``l``).  phrase_count's window length is the phrase itself, so even
+        there ``l`` stays None."""
         return self.l if self.kind == "sequence_count" else None
 
     def effective_terms(self) -> Optional[Tuple[int, ...]]:
-        """Query terms are search parameters ONLY — normalized to ``None``
-        off the search kinds (same contract as :meth:`effective_l`: a
-        stray ``terms`` on word_count can neither split nor mis-share a
-        group).  Search kinds always carry their real terms, so two
-        distinct searches can never share a batched chunk."""
-        return self.terms if self.kind in SEARCH_KINDS else None
+        """Query terms are live for the search kinds, ``agg_terms`` (the
+        aggregation term set) and ``phrase_count`` (the phrase tokens) —
+        normalized to ``None`` everywhere else (same contract as
+        :meth:`effective_l`: a stray ``terms`` on word_count can neither
+        split nor mis-share a group).  Term-carrying kinds always keep
+        their real terms, so two distinct queries never share a chunk."""
+        if self.kind in SEARCH_KINDS or self.kind in _TERM_QUERY_KINDS:
+            return self.terms
+        return None
 
     def effective_k(self) -> Optional[int]:
         """Top-k is a search parameter ONLY; search queries that omit it
@@ -111,9 +130,25 @@ class Query:
             return None
         return DEFAULT_TOP_K if self.k is None else int(self.k)
 
+    def effective_predicate(self) -> Optional[Tuple]:
+        """The filter predicate is a ``filter_count`` parameter ONLY
+        (canonicalized in ``__post_init__``); ``None`` off that kind so a
+        stray predicate can never split an unrelated group, and two
+        distinct predicates never share a chunk."""
+        return self.predicate if self.kind == "filter_count" else None
+
+    def effective_agg(self) -> Optional[str]:
+        """The aggregation op is an ``agg_terms`` parameter ONLY; queries
+        that omit it get the canonical default (``sum``) so explicit-
+        default and omitted-op queries share one group."""
+        if self.kind != "agg_terms":
+            return None
+        return normalize_agg(self.agg)
+
     def group_key(self) -> Tuple:
         return (self.kind, self.effective_l(), self.effective_terms(),
-                self.effective_k())
+                self.effective_k(), self.effective_predicate(),
+                self.effective_agg())
 
 
 #: Flush/latency signature of the single-corpus execution path (no pack).
@@ -309,6 +344,13 @@ class AnalyticsServer:
             normalize_terms(q.terms)         # raises on None/empty/negative
             if q.k is not None and q.k < 1:
                 raise ValueError(f"search top-k must be >= 1, got {q.k}")
+        if q.kind == "filter_count" and q.predicate is None:
+            raise ValueError("filter_count queries need a predicate")
+        if q.kind == "agg_terms":
+            normalize_terms(q.terms)         # raises on None/empty/negative
+            normalize_agg(q.agg)             # raises on unknown ops
+        if q.kind == "phrase_count":
+            normalize_phrase(q.terms)        # raises unless >= 2 valid ids
         if q.corpus not in self._corpora:
             raise KeyError(f"corpus {q.corpus!r} not registered")
         self.refresh(q.corpus)
@@ -326,9 +368,11 @@ class AnalyticsServer:
         """Validate ``queries`` and group them by :meth:`Query.group_key`.
 
         Returns ``[(group_key, idxs)]`` in first-seen order; the key is the
-        normalized ``(kind, l, terms, k)`` tuple — ``l`` is None for every
-        kind but sequence_count, ``terms``/``k`` are None off the search
-        kinds (see the ``effective_*`` normalizers on :class:`Query`).
+        normalized ``(kind, l, terms, k, predicate, agg)`` tuple — ``l`` is
+        None for every kind but sequence_count, ``terms`` is None off the
+        search / agg_terms / phrase_count kinds, ``k`` off the search
+        kinds, ``predicate`` off filter_count and ``agg`` off agg_terms
+        (see the ``effective_*`` normalizers on :class:`Query`).
         """
         for q in queries:
             self.validate(q)
@@ -344,13 +388,14 @@ class AnalyticsServer:
         self.stats.queries += len(queries)
 
         results: List = [None] * len(queries)
-        for (kind, l, terms, k), idxs in plans:
+        for (kind, l, terms, k, predicate, agg), idxs in plans:
             self.stats.groups += 1
             names: List[str] = []
             for i in idxs:
                 if queries[i].corpus not in names:
                     names.append(queries[i].corpus)
-            by_corpus = self.run_group(kind, names, l=l, terms=terms, k=k)
+            by_corpus = self.run_group(kind, names, l=l, terms=terms, k=k,
+                                       predicate=predicate, agg=agg)
             for i in idxs:
                 results[i] = by_corpus[queries[i].corpus]
         return results
@@ -382,8 +427,11 @@ class AnalyticsServer:
     def run_group(self, kind: str, names: Sequence[str],
                   l: Optional[int] = None,
                   terms: Optional[Tuple[int, ...]] = None,
-                  k: Optional[int] = None, target_shards: int = 1) -> Dict:
-        """Execute one (kind, l, terms, k) group over deduped ``names``.
+                  k: Optional[int] = None,
+                  predicate: Optional[Tuple] = None,
+                  agg: Optional[str] = None,
+                  target_shards: int = 1) -> Dict:
+        """Execute one normalized-parameter group over deduped ``names``.
 
         Chunks corpora of similar grammar size together: padding in each
         pack is bounded by the size spread within the chunk.  Name is the
@@ -398,12 +446,15 @@ class AnalyticsServer:
         out: Dict = {}
         for s in range(0, len(order), cap):
             out.update(self.execute_chunk(kind, order[s: s + cap], l=l,
-                                          terms=terms, k=k))
+                                          terms=terms, k=k,
+                                          predicate=predicate, agg=agg))
         return out
 
     def _check_chunk_params(self, kind: str, l: Optional[int],
                             terms: Optional[Tuple[int, ...]],
-                            k: Optional[int]) -> None:
+                            k: Optional[int],
+                            predicate: Optional[Tuple] = None,
+                            agg: Optional[str] = None) -> None:
         """Group parameters must arrive normalized (``Query.effective_*``):
         required for the kinds that consume them, ``None`` everywhere else —
         a stray parameter can therefore never split or mis-share a group,
@@ -420,11 +471,33 @@ class AnalyticsServer:
             if k is None or k < 1:
                 raise ValueError(f"search chunk needs an explicit k >= 1, "
                                  f"got {k!r}")
-        elif terms is not None or k is not None:
+        elif kind == "agg_terms":
+            normalize_terms(terms)
+        elif kind == "phrase_count":
+            normalize_phrase(terms)
+        elif terms is not None:
             raise ValueError(
-                f"terms={terms!r}/k={k!r} are meaningless for kind "
-                f"{kind!r}; group keys normalize them to None "
-                f"(Query.effective_terms/effective_k)")
+                f"terms={terms!r} are meaningless for kind {kind!r}; group "
+                f"keys normalize them to None (Query.effective_terms)")
+        if kind not in SEARCH_KINDS and k is not None:
+            raise ValueError(
+                f"k={k!r} is meaningless for kind {kind!r}; group keys "
+                f"normalize it to None (Query.effective_k)")
+        if kind == "filter_count":
+            normalize_predicate(predicate)   # raises on None/malformed
+        elif predicate is not None:
+            raise ValueError(
+                f"predicate={predicate!r} is meaningless for kind "
+                f"{kind!r}; group keys normalize it to None "
+                f"(Query.effective_predicate)")
+        if kind == "agg_terms":
+            if agg not in ("sum", "max"):
+                raise ValueError(f"agg_terms chunk needs an explicit "
+                                 f"sum/max op, got {agg!r}")
+        elif agg is not None:
+            raise ValueError(
+                f"agg={agg!r} is meaningless for kind {kind!r}; group "
+                f"keys normalize it to None (Query.effective_agg)")
 
     def _count_fallback(self, kind: str, gb: Optional[GrammarBatch] = None,
                         ga: Optional[GrammarArrays] = None) -> None:
@@ -434,12 +507,14 @@ class AnalyticsServer:
         dispatch on (core.batch.resolve_batch_method / the single-corpus
         analogue), so the counter mirrors what actually runs without the
         engines having to report back through the jitted paths."""
-        per_file = kind in PER_FILE_KINDS or kind in SEARCH_KINDS
+        per_file = (kind in PER_FILE_KINDS or kind in SEARCH_KINDS
+                    or kind in ("filter_count", "agg_terms"))
         requested = self.method
         if gb is None:
             requested = self._SINGLE_METHOD.get(requested, requested)
-        if kind in SEARCH_KINDS:
-            # search statistics run the per-file base of the requested
+        if kind in SEARCH_KINDS or kind in ("filter_count", "agg_terms"):
+            # search statistics (and the query tier's filter/agg counts,
+            # which share them) run the per-file base of the requested
             # method (search/index.py base_method)
             requested = base_method(requested)
         if gb is not None:
@@ -452,37 +527,50 @@ class AnalyticsServer:
 
     def _execute_batched(self, gb: GrammarBatch, kind: str,
                          l: Optional[int], terms: Optional[Tuple[int, ...]],
-                         k: Optional[int]) -> List:
+                         k: Optional[int],
+                         predicate: Optional[Tuple] = None,
+                         agg: Optional[str] = None) -> List:
         """One batched program over a pack: the six analytics via
         ``run_batched``, the search kinds via the retrieval engine (which
-        memoizes its tf/df/dl statistics on the same pack)."""
+        memoizes its tf/df/dl statistics on the same pack), the query
+        operators via the query engine (filter/agg share those memoized
+        statistics; phrase reuses the pack's sequence plans)."""
         if kind in SEARCH_KINDS:
             return batched_search(gb, terms, k=k, scheme=KIND_SCHEME[kind],
                                   method=self.method)
+        if kind in QUERY_KINDS:
+            return run_batched_query(gb, kind, predicate=predicate,
+                                     terms=terms, agg=agg,
+                                     method=self.method)
         return run_batched(gb, kind, method=self.method,
                            l=3 if l is None else l)
 
     def execute_chunk(self, kind: str, chunk: Sequence[str],
                       l: Optional[int] = None,
                       terms: Optional[Tuple[int, ...]] = None,
-                      k: Optional[int] = None) -> Dict:
+                      k: Optional[int] = None,
+                      predicate: Optional[Tuple] = None,
+                      agg: Optional[str] = None) -> Dict:
         """ONE execution: a jitted batched call for a multi-corpus chunk, or
         the per-corpus path (memoized weights) when the chunk degenerates to
         one corpus.  Records the observed wall latency into the
         per-signature EWMA (``stats.latency_ewma``) that the async flush
         policy uses as its batch-latency estimate.
 
-        ``l``/``terms``/``k`` must be the group-normalized parameters: real
-        values for the kinds that consume them (sequence_count's window
-        length; the search kinds' query terms and top-k), ``None`` for every
-        other kind (enforced in :meth:`_check_chunk_params` so a stray
-        ``Query`` field can never split or mis-share a group).
+        ``l``/``terms``/``k``/``predicate``/``agg`` must be the
+        group-normalized parameters: real values for the kinds that consume
+        them (sequence_count's window length; the search kinds' query terms
+        and top-k; filter_count's predicate; agg_terms'/phrase_count's term
+        set and op), ``None`` for every other kind (enforced in
+        :meth:`_check_chunk_params` so a stray ``Query`` field can never
+        split or mis-share a group).
 
         Sharded mode (:meth:`shard_count` > 1): the pack splits row-wise
         across the corpus mesh and one program spans all devices — results
         remain bit-identical to the single-device pack.
         """
-        self._check_chunk_params(kind, l, terms, k)
+        self._check_chunk_params(kind, l, terms, k, predicate=predicate,
+                                 agg=agg)
         # flush-time freshness: a store appended to after its queries were
         # validated/grouped must still be served post-append data
         for name in chunk:
@@ -499,7 +587,8 @@ class AnalyticsServer:
                 # weights (and search index) memoized on the store
                 self._count_fallback(kind, ga=self._corpora[name])
                 out = {name: self._run_single(kind, name, l=l, terms=terms,
-                                              k=k)}
+                                              k=k, predicate=predicate,
+                                              agg=agg)}
                 sig = SINGLE_SIGNATURE
             else:
                 # bare GrammarArrays: a cached size-1 pack keeps compiled
@@ -508,14 +597,16 @@ class AnalyticsServer:
                 # costs one dispatch, not one re-plan + re-compile
                 gb = self._get_batch([name])
                 self._count_fallback(kind, gb=gb)
-                vals = self._execute_batched(gb, kind, l, terms, k)
+                vals = self._execute_batched(gb, kind, l, terms, k,
+                                             predicate=predicate, agg=agg)
                 sig = gb.signature
                 out = {name: vals[0]}
             self.stats.single_calls += 1
         else:
             gb = self._get_batch(list(chunk), shards=shards)
             self._count_fallback(kind, gb=gb)
-            vals = self._execute_batched(gb, kind, l, terms, k)
+            vals = self._execute_batched(gb, kind, l, terms, k,
+                                         predicate=predicate, agg=agg)
             self.stats.batched_calls += 1
             if shards > 1:
                 self.stats.sharded_calls += 1
@@ -558,11 +649,20 @@ class AnalyticsServer:
 
     def _run_single(self, kind: str, name: str, l: Optional[int] = None,
                     terms: Optional[Tuple[int, ...]] = None,
-                    k: Optional[int] = None):
+                    k: Optional[int] = None,
+                    predicate: Optional[Tuple] = None,
+                    agg: Optional[str] = None):
         """Per-corpus path: reuses weights memoized on the corpus store."""
         ga = self._corpora[name]
         store = self._stores.get(name)
         m = self._SINGLE_METHOD.get(self.method, self.method)
+        if kind in QUERY_KINDS:
+            # query_corpus duck-types the store: filter/agg reuse the
+            # memoized per-file traversal weights, phrase the memoized
+            # top-down weights
+            return query_corpus(store if store is not None else ga, kind,
+                                predicate=predicate, terms=terms, agg=agg,
+                                method=m)
         if kind in SEARCH_KINDS:
             # search_corpus reuses the SearchIndex memoized on the store
             # (and, through it, the memoized per-file traversal weights)

@@ -26,10 +26,12 @@ core (:meth:`AnalyticsServer.run_group`) — when any of:
                by submission age too;
 ``drain``      an explicit :meth:`drain` / :meth:`close`.
 
-Search queries (kinds ``search_bm25`` / ``search_tfidf``) ride the same
-machinery: their normalized query terms and top-k are part of
-:meth:`Query.group_key`, so two distinct searches can never share a
-batched chunk, while identical searches against many corpora batch (and
+Search queries (kinds ``search_bm25`` / ``search_tfidf``) and the query
+operators (``filter_count`` / ``agg_terms`` / ``phrase_count``) ride the
+same machinery: their normalized parameters (query terms, top-k, the
+filter predicate, the aggregation op) are part of
+:meth:`Query.group_key`, so two distinct queries can never share a
+batched chunk, while identical queries against many corpora batch (and
 shard) exactly like the six analytics.
 
 Backpressure: ``max_pending`` bounds the queue depth.  A submit that
@@ -112,8 +114,10 @@ class _Pending:
 class _Group:
     kind: str
     l: Optional[int]                # normalized (None unless sequence_count)
-    terms: Optional[Tuple[int, ...]] = None  # normalized (search kinds only)
+    terms: Optional[Tuple[int, ...]] = None  # normalized (search/agg/phrase)
     k: Optional[int] = None                  # normalized (search kinds only)
+    predicate: Optional[Tuple] = None        # normalized (filter_count only)
+    agg: Optional[str] = None                # normalized (agg_terms only)
     items: List[_Pending] = field(default_factory=list)
     last_arrival: float = 0.0
     # distinct corpora in arrival order (dict-as-ordered-set: submit must
@@ -151,8 +155,10 @@ class FlushEvent:
     n_corpora: int
     at: float                       # clock time the flush fired
     n_shed: int = 0                 # group members shed (expired deadline)
-    terms: Optional[Tuple[int, ...]] = None  # search kinds only
+    terms: Optional[Tuple[int, ...]] = None  # search/agg_terms/phrase_count
     k: Optional[int] = None                  # search kinds only
+    predicate: Optional[Tuple] = None        # filter_count only
+    agg: Optional[str] = None                # agg_terms only
 
 
 class AsyncAnalyticsServer:
@@ -279,9 +285,10 @@ class AsyncAnalyticsServer:
             key = (gk, self._engine.size_bucket(query.corpus))
             g = self._pending.get(key)
             if g is None:
-                kind, l, terms, k = gk
+                kind, l, terms, k, predicate, agg = gk
                 g = self._pending[key] = _Group(kind=kind, l=l, terms=terms,
-                                                k=k)
+                                                k=k, predicate=predicate,
+                                                agg=agg)
             g.add(_Pending(query, deadline, fut, now))
             self.stats.submitted += 1
             self._depth += 1
@@ -388,6 +395,7 @@ class AsyncAnalyticsServer:
                 with self._exec_lock:
                     by_corpus = self._engine.run_group(
                         g.kind, names, l=g.l, terms=g.terms, k=g.k,
+                        predicate=g.predicate, agg=g.agg,
                         target_shards=self.target_shards)
             except Exception as e:              # noqa: BLE001 — fanned out
                 for p in live:
@@ -401,7 +409,7 @@ class AsyncAnalyticsServer:
             self.flush_log.append(FlushEvent(
                 reason=reason, kind=g.kind, l=g.l, n_queries=len(live),
                 n_corpora=len(names), at=now, n_shed=len(shed),
-                terms=g.terms, k=g.k))
+                terms=g.terms, k=g.k, predicate=g.predicate, agg=g.agg))
 
     # ---------------------------------------------------------- threaded --
     def start(self) -> "AsyncAnalyticsServer":

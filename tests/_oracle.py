@@ -173,6 +173,79 @@ def oracle_sequence_count(ga: GrammarArrays, l: int = 3,
     return grams.astype(np.int32), counts.astype(np.float32)
 
 
+# ---------------------------------------------------- query operators --
+# The composable query tier (repro/query): filter predicates, term-set
+# aggregations and phrase counts recomputed from the decompressed stream.
+# Every value is an integer-valued float32 (< 2**24), so the oracle and
+# the jitted pack programs agree bitwise in any reduce order.
+def oracle_filter(ga: GrammarArrays, predicate,
+                  stream: np.ndarray | None = None) -> np.ndarray:
+    """Ascending int32 file ids satisfying a canonical predicate tree
+    (``("term", t, c)`` / ``("and", kids)`` / ``("or", kids)``), evaluated
+    recursively over the decompress-then-scan term vector."""
+    tv = oracle_term_vector(ga, stream)
+    F, V = tv.shape
+
+    def ev(node):
+        if node[0] == "term":
+            _, t, c = node
+            cnt = tv[:, t] if t < V else np.zeros(F, np.float32)
+            return cnt >= np.float32(c)
+        masks = [ev(ch) for ch in node[1]]
+        out = masks[0]
+        for m in masks[1:]:
+            out = (out & m) if node[0] == "and" else (out | m)
+        return out
+
+    return np.flatnonzero(ev(predicate)).astype(np.int32)
+
+
+def oracle_agg(ga: GrammarArrays, terms, op: str = "sum",
+               stream: np.ndarray | None = None
+               ) -> Tuple[np.ndarray, np.float32]:
+    """(per_file [F] float32, total float32) sum/max of the term set's
+    counts — sequential accumulation over term slots in query order, like
+    the engine's fori_loop (exact either way: integer-valued float32)."""
+    tv = oracle_term_vector(ga, stream)
+    F, V = tv.shape
+    pf = np.zeros(F, np.float32)
+    for t in terms:
+        cnt = tv[:, int(t)] if int(t) < V else np.zeros(F, np.float32)
+        pf = pf + cnt if op == "sum" else np.maximum(pf, cnt)
+    if op == "sum":
+        total = np.float32(pf.sum(dtype=np.float32))
+    else:
+        total = np.float32(pf.max()) if F else np.float32(0.0)
+    return pf, total
+
+
+def oracle_phrase(ga: GrammarArrays, phrase,
+                  stream: np.ndarray | None = None) -> np.float32:
+    """Exact float32 occurrence count of the phrase: sliding windows over
+    each decompressed file segment (windows never cross a splitter)."""
+    ph = np.asarray(phrase, np.int64)
+    l = len(ph)
+    count = 0
+    for seg in stream_segments(ga, stream):
+        if len(seg) >= l:
+            wins = np.lib.stride_tricks.sliding_window_view(seg, l)
+            count += int((wins == ph[None, :]).all(axis=1).sum())
+    return np.float32(count)
+
+
+def oracle_query(ga: GrammarArrays, kind: str, predicate=None, terms=None,
+                 agg: str = "sum", stream: np.ndarray | None = None):
+    """Query-operator oracle addressed by serving kind, shaped exactly
+    like ``repro.query.engine.query_corpus`` / ``run_batched_query``."""
+    if kind == "filter_count":
+        return oracle_filter(ga, predicate, stream)
+    if kind == "agg_terms":
+        return oracle_agg(ga, terms, op=agg, stream=stream)
+    if kind == "phrase_count":
+        return oracle_phrase(ga, terms, stream)
+    raise ValueError(f"unknown query kind {kind!r}")
+
+
 def oracle_batch(gas: List[GrammarArrays], kind: str, l: int = 3) -> List:
     """Per-corpus oracle results for a corpus list — the reference shape of
     ``run_batched`` / ``run_sharded`` output (the sharded differential

@@ -20,7 +20,12 @@ Asserts (exit code is the test result):
   6. ingest: corpora grown by CompressedCorpus.append_files, run through
      the sharded pack (epoch stamps padded across shard-padding rows),
      bit-equal to from-scratch rebuilds of the concatenated files AND a
-     sharded server serves post-append data after a mid-traffic append.
+     sharded server serves post-append data after a mid-traffic append;
+  7. query operators: filter_count / agg_terms / phrase_count through the
+     sharded pack (per-shard predicate eval, aggregation, sequence-plan
+     phrase matching) bit-equal to the decompress-then-scan oracle and
+     the single-device batched path on the same ragged shard counts,
+     including the sharded server mode.
 """
 
 import os
@@ -38,11 +43,13 @@ from repro.core import (ANALYTICS_KINDS, GrammarBatch, compress_files,
                         flatten, run_batched)
 from repro.distributed.shard_batch import (corpus_mesh, mesh_size,
                                            shard_batch, run_sharded)
+from repro.query import run_batched_query
 from repro.search import batched_search
 from repro.serving.analytics_server import AnalyticsServer, Query
 from repro.serving.queue import AsyncAnalyticsServer
 
-from _oracle import assert_result_equal, full_stream, oracle, oracle_search
+from _oracle import (assert_result_equal, full_stream, oracle, oracle_query,
+                     oracle_search)
 
 rng = np.random.default_rng(20260801)
 
@@ -190,6 +197,52 @@ def test_sharded_search_matches_oracle_and_single_device():
     print("sharded search == oracle == single-device OK")
 
 
+def test_sharded_query_operators_match_oracle_and_single_device():
+    mesh = corpus_mesh()
+    pred = ("or", (("and", (("term", 3, 1), ("term", 7, 2))),
+                   ("term", 11, 3), ("term", 5000, 1)))
+    cases = [
+        ("filter_count", dict(predicate=pred)),
+        ("agg_terms", dict(terms=(3, 7, 7, 11, 5000), agg="sum")),
+        ("agg_terms", dict(terms=(3, 7, 11), agg="max")),
+    ]
+    for n in (5, 11):
+        gas = make_corpora(n)
+        gb1 = GrammarBatch.build(gas)
+        streams = [full_stream(ga) for ga in gas]
+        # a phrase actually present in corpus 0 (nonzero count somewhere)
+        seg0 = streams[0][streams[0] < gas[0].vocab_size]
+        phrase = tuple(int(x) for x in seg0[:2])
+        for kind, kw in cases + [("phrase_count", dict(terms=phrase))]:
+            wants = [oracle_query(ga, kind, stream=s, **kw)
+                     for ga, s in zip(gas, streams)]
+            got = run_sharded(gas, kind, mesh=mesh, **kw)
+            single = run_batched_query(gb1, kind, **kw)
+            assert len(got) == n
+            for i, (g_i, w_i, s_i) in enumerate(zip(got, wants, single)):
+                assert_result_equal(g_i, w_i, kind,
+                                    f"(sharded query, N={n}, corpus {i})")
+                results_equal(g_i, s_i, kind,
+                              f"(query vs single-device, N={n}, "
+                              f"corpus {i})")
+    # sharded server mode serves query kinds bit-equal to the unsharded
+    gas = {f"q{i}": ga for i, ga in enumerate(make_corpora(12))}
+    srv_s = AnalyticsServer(max_batch=4, shard_min_corpora=2)
+    srv_1 = AnalyticsServer(max_batch=4, mesh=None)
+    for name, ga in gas.items():
+        srv_s.register(name, ga)
+        srv_1.register(name, ga)
+    qs = [Query(f"q{i}", kind, **qkw) for i in range(12)
+          for kind, qkw in (("filter_count", dict(predicate=pred)),
+                            ("agg_terms", dict(terms=(3, 7), agg="max")),
+                            ("phrase_count", dict(terms=(3, 7))))]
+    for got, want, q in zip(srv_s.run(qs), srv_1.run(qs), qs):
+        results_equal(got, want, q.kind,
+                      f"(server sharded query, {q.corpus})")
+    assert srv_s.stats.sharded_calls > 0, srv_s.stats
+    print("sharded query operators == oracle == single-device OK")
+
+
 def test_sharded_ingest_appended_equals_rebuilt():
     from repro.data import CompressedCorpus
 
@@ -247,5 +300,6 @@ if __name__ == "__main__":
     test_server_sharded_equals_unsharded()
     test_queue_target_shards()
     test_sharded_search_matches_oracle_and_single_device()
+    test_sharded_query_operators_match_oracle_and_single_device()
     test_sharded_ingest_appended_equals_rebuilt()
     print("SHARDED ALL OK")

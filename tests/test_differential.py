@@ -39,10 +39,11 @@ from repro.core import (ANALYTICS_KINDS, Grammar, GrammarBatch,
                         inverted_index, ranked_inverted_index, run_batched,
                         sequence_count, sort_words, term_vector, word_count)
 from repro.distributed.shard_batch import corpus_mesh, run_sharded
+from repro.query import query_corpus, run_batched_query
 from repro.search import batched_search, search_corpus
 from _hypothesis_compat import given, settings, st
 from _oracle import (assert_result_equal, full_stream, oracle, oracle_batch,
-                     oracle_search)
+                     oracle_query, oracle_search, stream_segments)
 from conftest import make_repetitive_files
 
 BATCHED_METHODS = ("frontier", "leveled", "frontier_ell", "leveled_ell",
@@ -59,6 +60,49 @@ def _query_terms(rng, gas):
     terms.append(terms[0])                   # duplicate term
     terms.append(vmax + 17)                  # out-of-vocab
     return tuple(terms)
+
+
+def _random_predicate(rng, gas, depth: int = 0):
+    """Random AND/OR tree over term predicates: mostly in-vocab leaves,
+    one guaranteed out-of-vocab leaf at the root (count 0 everywhere —
+    must behave exactly like the oracle's zero column)."""
+    vmax = max(ga.vocab_size for ga in gas)
+
+    def node(d):
+        if d >= 2 or rng.random() < 0.4:
+            return ("term", int(rng.integers(0, vmax)),
+                    int(rng.integers(0, 4)))
+        op = "and" if rng.random() < 0.5 else "or"
+        return (op, tuple(node(d + 1)
+                          for _ in range(int(rng.integers(1, 4)))))
+
+    return ("or", (node(0), ("term", vmax + 23, 1)))
+
+
+def _random_phrase(rng, gas, streams):
+    """Half the time a window actually present in some corpus (nonzero
+    counts), half the time a random token tuple (usually count 0)."""
+    l = int(rng.integers(2, 5))
+    if rng.random() < 0.5:
+        ga = gas[0]
+        segs = [s for s in stream_segments(ga, streams[0]) if len(s) >= l]
+        if segs:
+            seg = segs[int(rng.integers(0, len(segs)))]
+            start = int(rng.integers(0, len(seg) - l + 1))
+            return tuple(int(x) for x in seg[start: start + l])
+    vmax = max(ga.vocab_size for ga in gas)
+    return tuple(int(t) for t in rng.integers(0, vmax + 3, l))
+
+
+def _query_cases(rng, gas, streams):
+    """One randomized case per query-operator family (agg gets both ops);
+    the kwargs feed the engine dispatchers and ``oracle_query`` alike."""
+    return [
+        ("filter_count", dict(predicate=_random_predicate(rng, gas))),
+        ("agg_terms", dict(terms=_query_terms(rng, gas), agg="sum")),
+        ("agg_terms", dict(terms=_query_terms(rng, gas), agg="max")),
+        ("phrase_count", dict(terms=_random_phrase(rng, gas, streams))),
+    ]
 
 
 def _random_grammar(rng, scale: int = 1):
@@ -215,6 +259,58 @@ def test_sharded_search_rankings_match_oracle(seed):
 
 @settings(max_examples=4, deadline=None)
 @given(st.integers(0, 100_000))
+def test_query_operators_match_oracle(seed):
+    """The composable query tier (filter / aggregate / phrase) bit-equal
+    to the decompress-then-scan oracle — file-id sets, per-file and total
+    float32 aggregates, float32 phrase counts — on the single-corpus and
+    batched paths, across traversal methods.  The phrase path runs the
+    sequence-support plans (core/sequence.py), never decompression."""
+    rng = np.random.default_rng(seed)
+    gas = [_random_grammar(rng)[0] for _ in range(3)]
+    streams = [full_stream(ga) for ga in gas]
+    gb = GrammarBatch.build(gas)
+    for kind, kw in _query_cases(rng, gas, streams):
+        wants = [oracle_query(ga, kind, stream=s, **kw)
+                 for ga, s in zip(gas, streams)]
+        for ga, want in zip(gas, wants):
+            assert_result_equal(query_corpus(ga, kind, **kw), want, kind,
+                                f"(single, seed={seed}, {kw})")
+        for method in ("frontier", "leveled", "frontier_ell"):
+            got = run_batched_query(gb, kind, method=method, **kw)
+            for i, (g_i, w_i) in enumerate(zip(got, wants)):
+                assert_result_equal(
+                    g_i, w_i, kind,
+                    f"(batched {method}, corpus {i}, seed={seed}, {kw})")
+
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs a multi-device mesh (CI multidevice lane "
+                           "forces 8 CPU host devices)")
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 100_000))
+def test_sharded_query_operators_match_oracle(seed):
+    """Query operators through the device-sharded pack — ragged N=5 so
+    shard padding is always exercised — bit-equal to the oracle and to
+    the single-device batched path."""
+    rng = np.random.default_rng(seed)
+    gas = [_random_grammar(rng)[0] for _ in range(5)]
+    streams = [full_stream(ga) for ga in gas]
+    gb1 = GrammarBatch.build(gas)
+    mesh = corpus_mesh()
+    for kind, kw in _query_cases(rng, gas, streams):
+        wants = [oracle_query(ga, kind, stream=s, **kw)
+                 for ga, s in zip(gas, streams)]
+        got = run_sharded(gas, kind, mesh=mesh, **kw)
+        single = run_batched_query(gb1, kind, **kw)
+        for i, (g_i, w_i, s_i) in enumerate(zip(got, wants, single)):
+            assert_result_equal(g_i, w_i, kind,
+                                f"(sharded, corpus {i}, seed={seed}, {kw})")
+            assert_result_equal(g_i, s_i, kind,
+                                f"(sharded vs single-device, corpus {i})")
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 100_000))
 def test_appended_corpus_matches_rebuilt_and_oracle(seed):
     """Streaming-ingest differential lane: a corpus grown by
     ``append_files`` vs a from-scratch build of the concatenated file
@@ -355,3 +451,11 @@ def test_differential_slow_larger_grammars(seeded_rng):
             assert_result_equal(
                 search_corpus(ga, terms, k=10, scheme=scheme), w_i,
                 f"search_{scheme}", "(single, slow)")
+    for kind, kw in _query_cases(seeded_rng, gas, streams):
+        wants = [oracle_query(ga, kind, stream=s, **kw)
+                 for ga, s in zip(gas, streams)]
+        got = run_batched_query(gb, kind, **kw)
+        for ga, w_i, g_i in zip(gas, wants, got):
+            assert_result_equal(g_i, w_i, kind, f"(batched, slow, {kw})")
+            assert_result_equal(query_corpus(ga, kind, **kw), w_i, kind,
+                                f"(single, slow, {kw})")

@@ -214,6 +214,24 @@ def test_grammar_batch_epoch_stamp(seeded_rng):
 
 
 # --------------------------------------------------------------- serving --
+#: Per-kind query parameters for the mid-ingest serving tests: one
+#: representative of each parameter family (plain analytics, search, and
+#: the three query operators — every pack-cache flavor must refresh).
+_INGEST_QUERY_PARAMS = {
+    "word_count": {},
+    "search_bm25": dict(terms=(1, 2, 3)),
+    "filter_count": dict(predicate=("or", (("and", (("term", 1, 1),
+                                                    ("term", 2, 1))),
+                                           ("term", 3, 2)))),
+    "agg_terms": dict(terms=(1, 2, 2, 50), agg="max"),
+    "phrase_count": dict(terms=(1, 2)),
+}
+
+
+def _ingest_query(corpus: str, kind: str) -> Query:
+    return Query(corpus=corpus, kind=kind, **_INGEST_QUERY_PARAMS[kind])
+
+
 def _expected_single(files, vocab, q: Query):
     srv = AnalyticsServer()
     srv.register(q.corpus, CompressedCorpus.build(files, vocab))
@@ -231,15 +249,14 @@ def _assert_results_equal(got, want):
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
-@pytest.mark.parametrize("kind", ["word_count", "search_bm25"])
+@pytest.mark.parametrize("kind", list(_INGEST_QUERY_PARAMS))
 def test_server_serves_post_append_data(kind, seeded_rng):
     files = make_repetitive_files(seeded_rng, VOCAB, n_files=2)
     tail = make_repetitive_files(seeded_rng, VOCAB, n_files=2)
     store = CompressedCorpus.build(list(files), VOCAB)
     srv = AnalyticsServer()
     srv.register("c", store)
-    q = Query(corpus="c", kind=kind,
-              terms=(1, 2, 3) if kind == "search_bm25" else None)
+    q = _ingest_query("c", kind)
     srv.run([q])                         # warm every memo/pack layer
     store.append_files(tail)
     got = srv.run([q])[0]
@@ -270,18 +287,19 @@ def test_server_batched_path_refreshes(seeded_rng):
                                  Query(corpus="b", kind="word_count")))
 
 
-def test_stale_pack_reinserted_into_cache_is_detected(seeded_rng):
+@pytest.mark.parametrize("kind", ["word_count", "filter_count"])
+def test_stale_pack_reinserted_into_cache_is_detected(kind, seeded_rng):
     """Attack the pack-cache layer directly: plant a pre-append pack back
     into the cache (simulating a lost purge).  The epoch stamp on the
-    cached pack must flag it as a miss — the stale pack cannot serve."""
+    cached pack must flag it as a miss — the stale pack cannot serve.
+    Query-kind packs ride the same cache, so the attack covers them."""
     files_a = make_repetitive_files(seeded_rng, VOCAB, n_files=2)
     files_b = make_repetitive_files(seeded_rng, VOCAB, n_files=2)
     store_a = CompressedCorpus.build(list(files_a), VOCAB)
     srv = AnalyticsServer()
     srv.register("a", store_a)
     srv.register("b", CompressedCorpus.build(files_b, VOCAB))
-    qs = [Query(corpus="a", kind="word_count"),
-          Query(corpus="b", kind="word_count")]
+    qs = [_ingest_query("a", kind), _ingest_query("b", kind)]
     srv.run(qs)
     stale_pack = next(iter(srv._batches.values()))
     assert stale_pack.epochs is not None
@@ -297,27 +315,28 @@ def test_stale_pack_reinserted_into_cache_is_detected(seeded_rng):
     assert srv.stats.epoch_invalidations > before
     assert srv._batches[key] is not stale_pack
     _assert_results_equal(
-        got[0],
-        _expected_single(files_a + tail, VOCAB,
-                         Query(corpus="a", kind="word_count")))
+        got[0], _expected_single(files_a + tail, VOCAB,
+                                 _ingest_query("a", kind)))
 
 
-def test_queue_submit_append_drain_serves_fresh(seeded_rng):
+@pytest.mark.parametrize(
+    "kind", ["word_count", "filter_count", "agg_terms", "phrase_count"])
+def test_queue_submit_append_drain_serves_fresh(kind, seeded_rng):
     """A query queued BEFORE an append must serve post-append data at
-    flush time (the flush-time refresh in execute_chunk)."""
+    flush time (the flush-time refresh in execute_chunk) — for the plain
+    analytics and every query-operator kind."""
     files = make_repetitive_files(seeded_rng, VOCAB, n_files=2)
     tail = make_repetitive_files(seeded_rng, VOCAB, n_files=1)
     store = CompressedCorpus.build(list(files), VOCAB)
     srv = AnalyticsServer()
     srv.register("c", store)
     aq = AsyncAnalyticsServer(srv, max_wait=60.0)
-    fut = aq.submit(Query(corpus="c", kind="word_count"))
+    fut = aq.submit(_ingest_query("c", kind))
     store.append_files(tail)             # mutation lands while queued
     aq.drain()
     _assert_results_equal(
         fut.result(timeout=30),
-        _expected_single(files + tail, VOCAB,
-                         Query(corpus="c", kind="word_count")))
+        _expected_single(files + tail, VOCAB, _ingest_query("c", kind)))
 
 
 # ------------------------------------------------------------ save / load --
