@@ -46,11 +46,22 @@ accounted for — completed + shed + rejected == offered.  Emitted rows
 * ``load/overload/*``           — shed / rejected / completed rates and
   p99 at the overload point;
 * ``load/cache_hit_rate``       — engine pack-cache hit rate under the
-  zipf skew, whole sweep.
+  zipf skew, whole sweep;
+* ``load/stage/*/p99``          — per-stage latency breakdown from the
+  engine's ``repro_server_stage_seconds`` histogram (pack_build /
+  compile / execute / queue_wait) over the whole sweep;
+* ``load/metrics_overhead``     — median queue latency with full
+  instrumentation over the registry-disabled baseline, same trace
+  (``docs/observability.md``; the ≤5 % floor in ``run.py``).
+
+The run also dumps both registries (server + process-global) to
+``METRICS_snapshot.json`` — JSON snapshot plus the Prometheus text
+rendering — which CI uploads as an artifact next to BENCH_batch.json.
 """
 
 from __future__ import annotations
 
+import json
 import multiprocessing as mp
 import threading
 import time
@@ -60,15 +71,22 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs import MetricsRegistry, global_registry
 from repro.serving import (AnalyticsServer, AsyncAnalyticsServer,
                            DeadlineExceeded, Query, QueueFull)
 
 from ._load_trace import KIND_WEIGHTS, client_trace, zipf_popularity
-from .bench_queue import make_uniform_corpora
+from .bench_queue import KINDS as QUEUE_KINDS
+from .bench_queue import _make_trace, _replay, make_uniform_corpora
 from .common import emit
 
 __all__ = ["KIND_WEIGHTS", "LoadSpec", "LoadResult", "zipf_popularity",
-           "make_traces", "run_open_loop", "sweep", "run"]
+           "make_traces", "run_open_loop", "sweep", "metrics_overhead",
+           "run"]
+
+#: The span stages whose p99 the harness reports (the full stage set the
+#: server observes into ``repro_server_stage_seconds``).
+STAGES = ("pack_build", "compile", "execute", "queue_wait")
 
 
 @dataclass
@@ -285,6 +303,40 @@ def sweep(eng: AnalyticsServer, names: Sequence[str], base: LoadSpec,
     return out
 
 
+def metrics_overhead(smoke: bool = False) -> dict:
+    """Price of the observability layer on the serving hot path.
+
+    Replays the bench_queue trace against two fresh engines on identical
+    corpora — one with ``MetricsRegistry(enabled=False)`` (counters and
+    gauges still record; histograms and span building are no-ops, the
+    documented baseline), one fully instrumented — and reports the ratio
+    of steady-state median latencies.  ``run.py check_floors`` holds the
+    ratio under the documented ceiling (≤5 % in the full sweep)."""
+    n_queries = 24 if smoke else 96
+    gas = make_uniform_corpora(4, seed=13)
+    medians = {}
+    for mode in ("off", "on"):
+        eng = AnalyticsServer(
+            max_batch=4, registry=MetricsRegistry(enabled=(mode == "on")))
+        names = []
+        for i, ga in enumerate(gas):
+            name = f"m{i}"
+            eng.register(name, ga)
+            names.append(name)
+        for kind in QUEUE_KINDS:
+            eng.run([Query(n, kind, l=3) for n in names])
+        rng = np.random.default_rng(17)
+        trace = _make_trace(rng, names, n_queries,
+                            mean_gap_s=0.02 if smoke else 0.01)
+        _replay(eng, trace)                     # partial-pack compiles
+        _replay(eng, trace)
+        lats, _, _ = _replay(eng, trace)        # steady state
+        medians[mode] = float(np.median(lats))
+    return {"median_off_us": medians["off"] * 1e6,
+            "median_on_us": medians["on"] * 1e6,
+            "ratio": medians["on"] / max(medians["off"], 1e-12)}
+
+
 def run(smoke: bool = False) -> dict:
     n_corpora = 4 if smoke else 12
     n_clients = 2 if smoke else 4
@@ -353,6 +405,8 @@ def run(smoke: bool = False) -> dict:
     def _pct(a: np.ndarray, q: float) -> float:
         return float(np.percentile(a, q)) if a.size else float("nan")
 
+    overhead = metrics_overhead(smoke)
+
     h_slo = h.slo_met / max(h.slo_total, 1)
     emit("load/saturation_qps", 0.0, f"{saturation_qps:.0f}q/s")
     emit("load/p50_latency", _pct(h.latencies_s, 50), f"mult={h_mult}")
@@ -367,6 +421,27 @@ def run(smoke: bool = False) -> dict:
          f"{over.rejected / max(over.offered, 1):.3f}")
     emit("load/overload/p99_latency", _pct(over.latencies_s, 99),
          f"offered={over.offered_qps:.0f}q/s")
+
+    # per-stage latency breakdown: the engine's stage histogram covers the
+    # whole sweep (every flush on eng, healthy and overloaded alike)
+    stage_stats = {}
+    for stage in STAGES:
+        child = eng.stats.stage_seconds.labels(stage)
+        p99, n = child.percentile(99), child.count
+        stage_stats[stage] = {"p99_us": p99 * 1e6, "count": n}
+        emit(f"load/stage/{stage}/p99", p99, f"n={n}")
+    emit("load/metrics_overhead", 0.0,
+         f"ratio={overhead['ratio']:.3f};"
+         f"on={overhead['median_on_us']:.0f}us;"
+         f"off={overhead['median_off_us']:.0f}us")
+
+    # dump both registries next to BENCH_batch.json (CI artifact)
+    with open("METRICS_snapshot.json", "w") as f:
+        json.dump({"snapshot": {"server": eng.registry.snapshot(),
+                                "global": global_registry().snapshot()},
+                   "prometheus": (eng.registry.render_prometheus()
+                                  + global_registry().render_prometheus())},
+                  f, indent=1)
 
     def _row(r: LoadResult) -> dict:
         return {"offered": r.offered, "offered_qps": r.offered_qps,
@@ -388,6 +463,9 @@ def run(smoke: bool = False) -> dict:
         "p99_latency_us": _pct(h.latencies_s, 99) * 1e6,
         "slo_attainment": h_slo,
         "cache_hit_rate": cache_rate,
+        "stage": stage_stats,
+        "metrics_overhead_ratio": overhead["ratio"],
+        "metrics_overhead": overhead,
         "sweep": {str(m): _row(r) for m, r in results},
         "overload": {**_row(over),
                      "factor_vs_saturation": over_factor,

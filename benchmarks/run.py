@@ -133,6 +133,18 @@ def check_floors(data: dict, smoke: bool = False) -> List[str]:
         need(over["completed"] > 0,
              "load/overload served nothing — shedding must degrade, "
              "not blackhole")
+        # observability overhead: full instrumentation (histograms + span
+        # trees) vs the registry-disabled baseline on the same trace.  The
+        # documented ≤5 % floor binds in the full sweep; smoke medians are
+        # tens of microseconds on shared CI boxes, so smoke only guards
+        # against gross regressions (docs/observability.md)
+        ratio = load.get("metrics_overhead_ratio")
+        if ratio is not None:
+            ceil = 1.5 if smoke else 1.05
+            need(ratio <= ceil,
+                 f"load/metrics_overhead ratio {ratio:.3f} > {ceil} "
+                 f"(instrumentation must stay within the documented "
+                 f"overhead budget)")
     return v
 
 

@@ -83,6 +83,8 @@ try:
 except ImportError:  # pragma: no cover
     from jax.experimental.shard_map import shard_map
 
+from repro.obs import plan_stage as _plan_stage
+
 from .grammar import (GrammarArrays, StaleGrammarError,
                       pow2_bucket as _pow2_bucket)
 from . import sequence as _sequence
@@ -311,18 +313,20 @@ class GrammarBatch:
         """
         key = ("ell",)
         if key not in self._plan_cache:
-            K = self.ell_plan_width()
-            src = np.zeros((self.n, self.R_pad, K), np.int32)
-            freq = np.zeros((self.n, self.R_pad, K), np.float32)
-            level = np.full((self.n, self.R_pad), -1, np.int32)
-            for i, ga in enumerate(self.gas):
-                s, f = ga.in_edges_ell_dense(k=K)
-                src[i, : ga.num_rules] = s
-                freq[i, : ga.num_rules] = f
-                level[i, : ga.num_rules] = ga.level
-            self._plan_cache[key] = (
-                self._place(src), self._place(freq), self._place(level),
-                max(ga.num_levels for ga in self.gas))
+            with _plan_stage("ell"):
+                K = self.ell_plan_width()
+                src = np.zeros((self.n, self.R_pad, K), np.int32)
+                freq = np.zeros((self.n, self.R_pad, K), np.float32)
+                level = np.full((self.n, self.R_pad), -1, np.int32)
+                for i, ga in enumerate(self.gas):
+                    s, f = ga.in_edges_ell_dense(k=K)
+                    src[i, : ga.num_rules] = s
+                    freq[i, : ga.num_rules] = f
+                    level[i, : ga.num_rules] = ga.level
+                self._plan_cache[key] = (
+                    self._place(src), self._place(freq),
+                    self._place(level),
+                    max(ga.num_levels for ga in self.gas))
         return self._plan_cache[key]
 
     # ------------------------------------------------------------ build --
@@ -1076,6 +1080,12 @@ def _padded_sequence_plans(gb: GrammarBatch, l: int):
     groups, so repeat sequence_count traffic pays the planning once."""
     if l in gb._plan_cache:
         return gb._plan_cache[l]
+    with _plan_stage("sequence"):
+        gb._plan_cache[l] = _build_sequence_plans(gb, l)
+    return gb._plan_cache[l]
+
+
+def _build_sequence_plans(gb: GrammarBatch, l: int):
     N = gb.n
     h = l - 1
     htps = [_sequence.plan_head_tail(ga, l) for ga in gb.gas]
@@ -1122,8 +1132,7 @@ def _padded_sequence_plans(gb: GrammarBatch, l: int):
         gb._place(_pad_stack([p.win_start for p in sps], W_pad)),
         gb._place(_pad_stack([p.win_rule for p in sps], W_pad)),
         gb._place(win_valid))
-    gb._plan_cache[l] = (head, tail, stream)
-    return gb._plan_cache[l]
+    return (head, tail, stream)
 
 
 def batched_sequence_count(gb: GrammarBatch, l: int = 3,

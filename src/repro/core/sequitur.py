@@ -22,10 +22,13 @@ on the flattened arrays produced by :mod:`repro.core.grammar`.
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
+
+from repro.obs import global_registry
 
 # Node storage: parallel lists (struct-of-arrays linked list).  A node is an
 # index into these lists.  ``val`` >= 0 is a terminal; ``val`` < 0 encodes
@@ -378,10 +381,23 @@ class IncrementalSequitur:
             bad = toks[(toks < 0) | (toks >= self.vocab_size)][0]
             raise ValueError(f"token {int(bad)} outside word range "
                              f"[0, {self.vocab_size})")
+        t0 = time.perf_counter()
         for t in toks:
             self._sq.append(0, int(t))
         self._sq.append(0, self.vocab_size + self.n_files)
         self.n_files += 1
+        # ingest throughput: host-side Sequitur is the streaming tier's
+        # bottleneck candidate, so appends are metered on the process
+        # registry (wall time — compression runs outside any server clock)
+        reg = global_registry()
+        reg.counter("repro_ingest_files_total",
+                    "files fed through IncrementalSequitur").inc()
+        reg.counter("repro_ingest_tokens_total",
+                    "word tokens fed through IncrementalSequitur"
+                    ).inc(float(toks.size))
+        reg.histogram("repro_ingest_append_seconds",
+                      "wall seconds per IncrementalSequitur.append_file"
+                      ).observe(time.perf_counter() - t0)
 
     def append_files(self, files: Sequence[np.ndarray]) -> None:
         for f in files:

@@ -31,8 +31,19 @@ from repro.core import GrammarArrays, IncrementalSequitur, flatten
 from repro.core.grammar import StaleGrammarError, expand_range
 from repro.core.traversal import per_file_weights as _per_file_weights
 from repro.core.traversal import top_down_weights as _top_down_weights
+from repro.obs import global_registry
 
 __all__ = ["CompressedCorpus", "StaleGrammarError"]
+
+
+def _count_memo(result: str) -> None:
+    """Memo traffic on the epoch-stamped derived-artifact cache: ``hit``
+    (stamp current), ``stale`` (entry predates an append — recomputed, the
+    belt-and-braces invalidation firing), ``miss`` (first build)."""
+    global_registry().counter(
+        "repro_store_memo_lookups_total",
+        "epoch-stamped memo lookups on CompressedCorpus (weights, "
+        "search index) by result", ("result",)).labels(result).inc()
 
 
 _META_FIELDS = ("vocab_size", "num_files", "num_rules", "num_levels")
@@ -128,6 +139,11 @@ class CompressedCorpus:
             [self.file_lens.astype(np.int64), lens])
         self.epoch += 1
         self._weights_cache.clear()
+        reg = global_registry()
+        reg.counter("repro_store_appends_total",
+                    "append_files epoch bumps").inc()
+        reg.counter("repro_store_append_files_total",
+                    "files absorbed by append_files").inc(len(files))
         return self
 
     def check_epoch(self, epoch: int) -> None:
@@ -216,7 +232,9 @@ class CompressedCorpus:
         (tests/test_ingest.py plants a poisoned stale entry to prove it)."""
         hit = self._weights_cache.get(key)
         if hit is not None and hit[0] == self.epoch:
+            _count_memo("hit")
             return hit[1]
+        _count_memo("stale" if hit is not None else "miss")
         value = build()
         self._weights_cache[key] = (self.epoch, value)
         return value

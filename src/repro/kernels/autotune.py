@@ -32,6 +32,7 @@ artifact so the tuned table is inspectable per run.
 
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import subprocess
@@ -44,6 +45,28 @@ from ._common import DEFAULT_BR, DEFAULT_FC, DEFAULT_WC, round_up_pow2
 CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
 DEFAULT_CACHE_PATH = "AUTOTUNE_cache.json"
 CACHE_VERSION = 1
+
+# Opt-in profiler annotations: when this env var is set (non-empty, not
+# "0"), every timed candidate runs inside a named
+# ``jax.profiler.TraceAnnotation`` region, so a captured device trace
+# (``jax.profiler.trace``) attributes kernel time to the sweep candidate
+# that launched it.  Off by default — the annotation context has a small
+# per-call cost and tuning runs are usually not being profiled.
+ANNOTATE_ENV = "REPRO_PROFILE_ANNOTATIONS"
+
+
+def annotations_enabled() -> bool:
+    return os.environ.get(ANNOTATE_ENV, "") not in ("", "0")
+
+
+def trace_annotation(name: str) -> contextlib.AbstractContextManager:
+    """A context manager naming the enclosed device work in profiler
+    traces; a free ``nullcontext`` unless ``REPRO_PROFILE_ANNOTATIONS``
+    is set (jax import deferred so the off path stays import-free)."""
+    if not annotations_enabled():
+        return contextlib.nullcontext()
+    import jax
+    return jax.profiler.TraceAnnotation(name)
 
 # Candidate grids.  Small on purpose: each candidate is a fresh compile.
 BR_CANDIDATES = (128, 256, 512)
@@ -169,12 +192,15 @@ def tuned_blocks(kind: str, bucket: Sequence[int],
 # In-process block-size sweeps                                             #
 # ----------------------------------------------------------------------- #
 def _time_call(fn: Callable[[], Any], repeat: int = 3,
-               warmup: int = 1) -> float:
-    """Median seconds per call, steady-state (results block_until_ready)."""
+               warmup: int = 1, name: str = "autotune") -> float:
+    """Median seconds per call, steady-state (results block_until_ready).
+    ``name`` labels the timed region in profiler traces when
+    ``REPRO_PROFILE_ANNOTATIONS`` is on (see :func:`trace_annotation`)."""
     import jax
 
     def run() -> None:
-        jax.block_until_ready(fn())
+        with trace_annotation(name):
+            jax.block_until_ready(fn())
 
     for _ in range(warmup):
         run()
@@ -197,7 +223,8 @@ def _sweep(candidates: Iterable[Tuple[str, Dict[str, int],
     best: Optional[Tuple[str, Dict[str, int]]] = None
     for name, blocks, thunk in candidates:
         try:
-            t = _time_call(thunk, repeat=repeat, warmup=warmup)
+            t = _time_call(thunk, repeat=repeat, warmup=warmup,
+                           name=f"autotune:{name}")
         except Exception:
             t = float("inf")
         table[name] = t

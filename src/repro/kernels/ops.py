@@ -30,6 +30,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.obs import global_registry
+
 from . import autotune, ref
 from ._common import (DEFAULT_BR, DEFAULT_WC, force_interpret,
                       on_tpu as _on_tpu, reset_backend_cache,
@@ -69,6 +71,31 @@ ELL_PLAN_MAX_ENTRIES = 1 << 27
 # float32 vectors) VMEM-resident per corpus — ~24 B/rule.  Above this rule
 # count the engines fall back to the per-round streaming path.
 ELL_FUSED_MAX_RULES = 1 << 18
+
+
+def _count_dispatch(decision: str, path: str) -> None:
+    """Meter one dispatch decision on the process registry.  These fire at
+    trace/plan time (host side), so steady-state jitted traffic does NOT
+    re-count per call — the counters answer "which engine did this shape
+    compile onto", which is the question the 31x campaign needs."""
+    global_registry().counter(
+        "repro_kernel_dispatch_total",
+        "kernel dispatch decisions at trace/plan time",
+        ("decision", "path")).labels(decision, path).inc()
+
+
+def _count_tuned(kind: str, result: str) -> None:
+    global_registry().counter(
+        "repro_kernel_tuned_table_total",
+        "autotune tuned-table lookups by result",
+        ("kind", "result")).labels(kind, result).inc()
+
+
+def _exec_path(interpret) -> str:
+    """Which of the three execution modes a wrapper is about to take."""
+    if _use_jnp_ref(interpret):
+        return "jnp_ref"
+    return "pallas_interpret" if _interp(interpret) else "pallas_compiled"
 
 
 def bincount_use_ref(n: int, nbins: int) -> bool:
@@ -116,13 +143,16 @@ def ell_batched_use_ref(num_edges: int, n: int, rows: int, k: int,
     tuned = autotune.tuned_use_ref(
         "ell_vs_seg", autotune.shape_bucket(max(n // shards, 1), rows, k))
     if tuned is not None:
-        return tuned
-    if (n // shards) * rows < ELL_BATCH_MIN_ROWS:
-        return True
-    if k > ELL_BATCH_MAX_WIDTH:
-        return True
-    fill = num_edges / max(n * rows * k, 1)
-    return fill < ELL_BATCH_MIN_FILL
+        _count_tuned("ell_vs_seg", "hit")
+        use_ref = tuned
+    else:
+        _count_tuned("ell_vs_seg", "miss")
+        use_ref = ((n // shards) * rows < ELL_BATCH_MIN_ROWS
+                   or k > ELL_BATCH_MAX_WIDTH
+                   or num_edges / max(n * rows * k, 1)
+                   < ELL_BATCH_MIN_FILL)
+    _count_dispatch("ell_vs_seg", "segment_sum" if use_ref else "ell")
+    return use_ref
 
 
 def ell_fused_use_kernel(rows: int) -> bool:
@@ -130,7 +160,9 @@ def ell_fused_use_kernel(rows: int) -> bool:
     the whole frontier state must fit VMEM (see ELL_FUSED_MAX_RULES).
     Engines that get False fall back to the per-round frontier path —
     identical results, per-round dispatch cost."""
-    return rows <= ELL_FUSED_MAX_RULES
+    fused = rows <= ELL_FUSED_MAX_RULES
+    _count_dispatch("fused_vs_per_round", "fused" if fused else "per_round")
+    return fused
 
 
 def ell_vector_plan_ok(n: int, rows: int, k: int, f: int) -> bool:
@@ -150,7 +182,9 @@ def _use_jnp_ref(interpret) -> bool:
 def _blocks(kind: str, bucket, defaults: dict) -> dict:
     """Merge tuned block sizes (autotune table) over the shipped defaults."""
     merged = dict(defaults)
-    for key, val in autotune.tuned_blocks(kind, bucket).items():
+    tuned = autotune.tuned_blocks(kind, bucket)
+    _count_tuned(kind, "hit" if tuned else "miss")
+    for key, val in tuned.items():
         if key in merged:
             merged[key] = val
     return merged
@@ -260,6 +294,7 @@ def ell_propagate_batched(weights: jnp.ndarray, active: jnp.ndarray,
     if n == 0 or rows == 0 or k == 0:
         z = jnp.zeros((n, rows), jnp.float32)
         return z, z
+    _count_dispatch("exec:ell_batched", _exec_path(interpret))
     if _use_jnp_ref(interpret):
         return ref.ell_propagate_batched_ref(weights, active, src, freq)
     blocks = _blocks("ell_batched", autotune.shape_bucket(n, rows, k),
@@ -290,6 +325,7 @@ def ell_propagate_vector(W: jnp.ndarray, active: jnp.ndarray,
     if n == 0 or rows == 0 or k == 0:
         return (jnp.zeros((n, rows, W.shape[-1]), jnp.float32),
                 jnp.zeros((n, rows), jnp.float32))
+    _count_dispatch("exec:ell_vector", _exec_path(interpret))
     if _use_jnp_ref(interpret):
         return ref.ell_propagate_vector_ref(W, active, src, freq)
     from .propagate_vector import DEFAULT_BRV, DEFAULT_WCV
@@ -324,6 +360,7 @@ def ell_frontier_fused(weights0: jnp.ndarray, in_deg: jnp.ndarray,
     if n == 0 or rows == 0 or k == 0:
         w = weights0.astype(jnp.float32)
         return (w, jnp.zeros(n, jnp.int32)) if with_rounds else w
+    _count_dispatch("exec:ell_fused", _exec_path(interpret))
     if _use_jnp_ref(interpret):
         return ref.ell_frontier_fused_ref(weights0, in_deg, src, freq,
                                           max_rounds,

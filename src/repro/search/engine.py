@@ -50,6 +50,7 @@ from repro.core.batch import GrammarBatch, _sharded_program, \
 from repro.core.grammar import pow2_bucket
 from repro.distributed.shard_batch import shard_batch
 from repro.kernels import ops as kops
+from repro.obs import plan_stage as _plan_stage
 
 from .index import SearchIndex, base_method, build_search_index
 from .scoring import (DEFAULT_TOP_K, K1P1, SCHEMES, avg_doc_len, bm25_norm,
@@ -112,18 +113,20 @@ def batch_search_stats(gb: GrammarBatch,
     m = base_method(method)
     key = ("search", m)
     if key not in gb._plan_cache:
-        tv = batched_term_vector(gb, method=m)
-        # dl/df are integer-valued (exact in float32 in any reduce order)
-        dl = np.asarray(jnp.sum(tv, axis=2), np.float32)        # [N, F_pad]
-        df = np.asarray(jnp.sum(tv > 0, axis=1)).astype(np.float32)
-        nf = gb.num_files.astype(np.int64)
-        norm = np.stack([
-            bm25_norm(dl[i], avg_doc_len(dl[i], int(nf[i])))
-            for i in range(gb.n)]).astype(np.float32)
-        fvalid = np.arange(gb.F_pad)[None, :] < nf[:, None]
-        gb._plan_cache[key] = _BatchSearchStats(
-            tv=tv, norm=gb._place(norm), fvalid=gb._place(fvalid),
-            df=df, nf=nf)
+        with _plan_stage("search_stats"):
+            tv = batched_term_vector(gb, method=m)
+            # dl/df are integer-valued (exact in float32 in any reduce
+            # order)
+            dl = np.asarray(jnp.sum(tv, axis=2), np.float32)    # [N, F_pad]
+            df = np.asarray(jnp.sum(tv > 0, axis=1)).astype(np.float32)
+            nf = gb.num_files.astype(np.int64)
+            norm = np.stack([
+                bm25_norm(dl[i], avg_doc_len(dl[i], int(nf[i])))
+                for i in range(gb.n)]).astype(np.float32)
+            fvalid = np.arange(gb.F_pad)[None, :] < nf[:, None]
+            gb._plan_cache[key] = _BatchSearchStats(
+                tv=tv, norm=gb._place(norm), fvalid=gb._place(fvalid),
+                df=df, nf=nf)
     return gb._plan_cache[key]
 
 

@@ -49,10 +49,15 @@ either way.
 from __future__ import annotations
 
 import time
+from collections.abc import MutableMapping
+from contextlib import contextmanager, nullcontext
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
+
+from repro.obs import BoundedLog, MetricsRegistry
+from repro.obs import tracing as _trace
 
 from repro.core import GrammarArrays, analytics as _analytics
 from repro.core.batch import (ANALYTICS_KINDS, PER_FILE_KINDS, GrammarBatch,
@@ -91,6 +96,11 @@ class Query:
     k: Optional[int] = None                   # search kinds only (top-k)
     predicate: Optional[Tuple] = None         # filter_count only
     agg: Optional[str] = None                 # agg_terms only (sum/max)
+    # root Span of this query's lifecycle, set by the serving layer when
+    # its registry is enabled (obs/tracing.py).  compare=False keeps it
+    # out of eq/hash, so group keys and dataclass equality are untouched.
+    trace: Optional[object] = field(default=None, compare=False,
+                                    repr=False)
 
     def __post_init__(self):
         # keep the frozen dataclass hashable / group-keyable when callers
@@ -159,47 +169,172 @@ SINGLE_SIGNATURE: Tuple = ("single",)
 DEFAULT_LATENCY_ESTIMATE = 0.02
 
 
-@dataclass
+def _encode_label(key) -> str:
+    """Stable label rendering for dict-view keys: pack-signature tuples
+    become ``8x16x...``, plain strings pass through."""
+    if isinstance(key, tuple):
+        return "x".join(str(v) for v in key)
+    return str(key)
+
+
+class _MetricDict(MutableMapping):
+    """Dict-shaped view over one labeled counter family.
+
+    Keys keep their original Python type (a flush reason string, the pack
+    signature tuple) and values read back as ints, so the pre-registry
+    call sites — ``stats.flushes.get("drain", 0)``,
+    ``stats.signatures[sig] = ... + 1``, ``stats.method_fallbacks ==
+    {...}`` — behave exactly as they did on a plain dict while every
+    update lands in the registry."""
+
+    def __init__(self, family, encode: Callable[[object], str] = str):
+        self._family = family
+        self._encode = encode
+        self._children: Dict = {}
+
+    def __getitem__(self, key):
+        child = self._children.get(key)
+        if child is None:
+            raise KeyError(key)
+        return int(child.value)
+
+    def __setitem__(self, key, value) -> None:
+        child = self._children.get(key)
+        if child is None:
+            child = self._children[key] = \
+                self._family.labels(self._encode(key))
+        child.set(float(value))
+
+    def __delitem__(self, key) -> None:
+        del self._children[key]
+        self._family.remove(self._encode(key))
+
+    def __iter__(self):
+        return iter(self._children)
+
+    def __len__(self) -> int:
+        return len(self._children)
+
+    def __eq__(self, other) -> bool:
+        if isinstance(other, _MetricDict):
+            other = dict(other)
+        return dict(self) == other
+
+    __hash__ = None
+
+    def __repr__(self) -> str:
+        return repr(dict(self))
+
+
 class ServerStats:
-    queries: int = 0
-    groups: int = 0            # (kind, params) groups seen
-    batched_calls: int = 0     # jitted batched executions
-    sharded_calls: int = 0     # of which: device-sharded packs
-    single_calls: int = 0      # per-corpus executions (memoized weights)
-    batch_cache_hits: int = 0  # GrammarBatch packs reused
-    # distinct pad signatures -> batched-call count (bounded by the number
-    # of distinct bucket shapes, not by traffic volume)
-    signatures: Dict[Tuple[int, ...], int] = field(default_factory=dict)
-    # "requested->resolved" -> count of executions where an explicitly
-    # requested ELL-family method degraded to its segment_sum base (the
-    # engine's shape-gate valves: plan width / absolute entries / the
-    # vector-payload budget).  The engines never remap silently any more —
-    # every downgrade lands here (core.batch.is_segment_sum_fallback).
-    method_fallbacks: Dict[str, int] = field(default_factory=dict)
+    """Serving counters, all backed by a :class:`~repro.obs.MetricsRegistry`
+    (the attribute API is a thin view: ``stats.queries += 1`` reads and
+    writes the registered counter, the dict-shaped fields are
+    :class:`_MetricDict` views over labeled families — so the same numbers
+    show up in ``registry.snapshot()`` / ``render_prometheus()`` without
+    any call-site churn).
 
-    # ----- ingest-tier epoch guard counters -----
-    # packs dropped + corpora re-snapshotted because a registered store's
-    # epoch moved (CompressedCorpus.append_files); each count is one
-    # "stale grammar could NOT be served" event
-    epoch_invalidations: int = 0
+    Scalar counters:
 
-    # ----- async queue counters (written by serving/queue.py) -----
-    submitted: int = 0                 # queries entered through submit()
-    flushes: Dict[str, int] = field(default_factory=dict)  # reason -> count
-    max_queue_depth: int = 0           # high-water pending-query count
-    rejected: int = 0                  # submits refused by max_pending
-    shed: int = 0                      # queries shed at flush time because
-    #                                    their deadline had already passed
-    #                                    (futures carry DeadlineExceeded)
+    * ``queries`` / ``groups`` — requests accepted, (kind, params) groups;
+    * ``batched_calls`` / ``sharded_calls`` / ``single_calls`` — jitted
+      batched executions, of which device-sharded, and per-corpus ones;
+    * ``batch_cache_hits`` — GrammarBatch packs reused;
+    * ``epoch_invalidations`` — packs dropped / corpora re-snapshotted
+      because a registered store's epoch moved (append_files): each count
+      is one "stale grammar could NOT be served" event;
+    * ``submitted`` / ``rejected`` / ``shed`` — async queue accounting
+      (entered through submit, refused by max_pending, expired at flush);
+    * ``max_queue_depth`` — pending-query high-water mark (a gauge).
 
-    # ----- latency estimator -----
-    # EWMA of observed chunk latencies keyed by (kind, chunk signature);
-    # the signature is the GrammarBatch pad signature for batched chunks or
-    # SINGLE_SIGNATURE for the per-corpus path.  Bounded by the number of
-    # distinct (kind, bucket-shape) pairs, not by traffic volume.
-    latency_ewma: Dict[Tuple, float] = field(default_factory=dict)
-    latency_obs: Dict[Tuple, int] = field(default_factory=dict)
-    ewma_alpha: float = 0.25
+    Dict views (labeled counter families):
+
+    * ``signatures`` — pad signature -> batched-call count (bounded by the
+      number of distinct bucket shapes, not traffic volume);
+    * ``method_fallbacks`` — "requested->resolved" counts of explicit
+      ELL-family requests that degraded to their segment_sum base
+      (core.batch.is_segment_sum_fallback);
+    * ``flushes`` — flush reason -> count (written by serving/queue.py).
+
+    The latency estimator state (``latency_ewma`` / ``latency_obs``) stays
+    plain host dicts: it is flush-*policy* control state keyed by tuples,
+    not a metric — the per-stage histograms carry the observable side.
+    """
+
+    _SCALARS = {
+        "queries": ("repro_server_queries_total",
+                    "queries accepted by run()/submit()"),
+        "groups": ("repro_server_groups_total",
+                   "(kind, params) query groups executed"),
+        "batched_calls": ("repro_server_batched_calls_total",
+                          "jitted batched executions"),
+        "sharded_calls": ("repro_server_sharded_calls_total",
+                          "batched executions that spanned a device mesh"),
+        "single_calls": ("repro_server_single_calls_total",
+                         "per-corpus executions (memoized weights)"),
+        "batch_cache_hits": ("repro_server_batch_cache_hits_total",
+                             "GrammarBatch packs reused from the cache"),
+        "epoch_invalidations": ("repro_server_epoch_invalidations_total",
+                                "stale packs/corpora dropped on an epoch "
+                                "bump (ingest appends)"),
+        "submitted": ("repro_queue_submitted_total",
+                      "queries entered through the async queue"),
+        "rejected": ("repro_queue_rejected_total",
+                     "submits refused by the max_pending bound"),
+        "shed": ("repro_queue_shed_total",
+                 "queries shed at flush time (deadline already passed)"),
+    }
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None):
+        self.registry = registry if registry is not None \
+            else MetricsRegistry()
+        r = self.registry
+        self._scalars = {attr: r.counter(name, help_)
+                         for attr, (name, help_) in self._SCALARS.items()}
+        self._depth_high = r.gauge(
+            "repro_queue_depth_high_water",
+            "pending-query depth high-water mark")
+        self.flushes = _MetricDict(r.counter(
+            "repro_queue_flushes_total",
+            "async queue flushes by firing condition", ("reason",)))
+        self.signatures = _MetricDict(r.counter(
+            "repro_server_pack_signatures_total",
+            "batched calls by pack pad signature", ("signature",)),
+            _encode_label)
+        self.method_fallbacks = _MetricDict(r.counter(
+            "repro_server_method_fallbacks_total",
+            "explicit ELL-family requests degraded to a segment_sum base",
+            ("transition",)))
+        # submit-to-result decomposition: pack_build / compile / execute /
+        # queue_wait (docs/observability.md has the stage model)
+        self.stage_seconds = r.histogram(
+            "repro_server_stage_seconds",
+            "per-stage latency of query execution", ("stage",))
+        # ----- latency estimator (plain host state, see class docstring):
+        # EWMA of observed chunk latencies keyed by (kind, signature) —
+        # GrammarBatch pad signature for batched chunks, SINGLE_SIGNATURE
+        # for the per-corpus path.  Bounded by the number of distinct
+        # (kind, bucket-shape) pairs, not by traffic volume.
+        self.latency_ewma: Dict[Tuple, float] = {}
+        self.latency_obs: Dict[Tuple, int] = {}
+        self.ewma_alpha: float = 0.25
+
+    @property
+    def max_queue_depth(self) -> int:
+        return int(self._depth_high.value)
+
+    @max_queue_depth.setter
+    def max_queue_depth(self, v: int) -> None:
+        self._depth_high.set(float(v))
+
+    def __repr__(self) -> str:
+        scalars = ", ".join(f"{a}={getattr(self, a)}"
+                            for a in self._SCALARS)
+        return (f"ServerStats({scalars}, "
+                f"max_queue_depth={self.max_queue_depth}, "
+                f"flushes={dict(self.flushes)}, "
+                f"signatures={dict(self.signatures)}, "
+                f"method_fallbacks={dict(self.method_fallbacks)})")
 
     def observe_latency(self, kind: str, signature: Tuple,
                         seconds: float) -> None:
@@ -242,6 +377,23 @@ class ServerStats:
         self.method_fallbacks[key] = self.method_fallbacks.get(key, 0) + 1
 
 
+def _scalar_property(attr: str) -> property:
+    """int-reading, registry-writing property so ``stats.x += 1`` keeps
+    working on counter-backed attributes."""
+    def _get(self) -> int:
+        return int(self._scalars[attr].value)
+
+    def _set(self, v) -> None:
+        self._scalars[attr].set(float(v))
+
+    return property(_get, _set)
+
+
+for _attr in ServerStats._SCALARS:
+    setattr(ServerStats, _attr, _scalar_property(_attr))
+del _attr
+
+
 class AnalyticsServer:
     """Groups (corpus, query) requests and runs them as batched programs."""
 
@@ -260,7 +412,10 @@ class AnalyticsServer:
     def __init__(self, max_batch: int = 16, bucket: bool = True,
                  method: str = "frontier", max_cached_batches: int = 32,
                  mesh: object = "auto",
-                 shard_min_corpora: Optional[int] = None):
+                 shard_min_corpora: Optional[int] = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 registry: Optional[MetricsRegistry] = None,
+                 trace_log_size: int = 1024):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         self.max_batch = max_batch
@@ -288,7 +443,18 @@ class AnalyticsServer:
         # GrammarArrays registrations, which are immutable)
         self._epochs: Dict[str, int] = {}
         self._batches: Dict[Tuple, GrammarBatch] = {}
-        self.stats = ServerStats()
+        # one injectable clock for the whole serving stack: chunk timing
+        # here, flush policy in the async queue (which defaults to this
+        # clock), span timestamps — so latency tests never sleep
+        self.clock = clock
+        self.registry = registry if registry is not None \
+            else MetricsRegistry(clock=clock)
+        self.stats = ServerStats(self.registry)
+        # bounded ring of completed root spans (query/chunk trees); the
+        # drop gauge makes eviction visible, like the queue's flush_log
+        self.trace_log = BoundedLog(trace_log_size, gauge=self.registry.gauge(
+            "repro_server_trace_log_dropped_spans",
+            "root spans evicted from the bounded trace ring"))
 
     # ---------------------------------------------------------- registry --
     def register(self, name: str,
@@ -383,9 +549,25 @@ class AnalyticsServer:
 
     def run(self, queries: Sequence[Query]) -> List:
         """Execute all queries; results align with the input order and are
-        identical to calling the single-corpus analytics per query."""
+        identical to calling the single-corpus analytics per query.
+
+        With the registry enabled, every query gets a root span on
+        ``q.trace``: the group's ``run_group`` span (shared across the
+        queries it answered — that sharing IS the batching) hangs under
+        each root, with chunk/pack_build/plan/execute children below it.
+        """
         plans = self.plan_groups(queries)
         self.stats.queries += len(queries)
+        tracing = self.registry.enabled
+        roots: List[Optional[_trace.Span]] = []
+        if tracing:
+            now = self.clock()
+            for q in queries:
+                root = _trace.Span("query", now,
+                                   attrs={"corpus": q.corpus,
+                                          "kind": q.kind, "path": "sync"})
+                object.__setattr__(q, "trace", root)
+                roots.append(root)
 
         results: List = [None] * len(queries)
         for (kind, l, terms, k, predicate, agg), idxs in plans:
@@ -394,10 +576,29 @@ class AnalyticsServer:
             for i in idxs:
                 if queries[i].corpus not in names:
                     names.append(queries[i].corpus)
-            by_corpus = self.run_group(kind, names, l=l, terms=terms, k=k,
-                                       predicate=predicate, agg=agg)
+            if tracing:
+                g = _trace.Span("run_group", self.clock(),
+                                attrs={"kind": kind,
+                                       "n_queries": len(idxs),
+                                       "n_corpora": len(names)})
+                with _trace.activate(g, self.clock):
+                    by_corpus = self.run_group(kind, names, l=l,
+                                               terms=terms, k=k,
+                                               predicate=predicate, agg=agg)
+                g.finish(self.clock())
+                for i in idxs:
+                    roots[i].children.append(g)
+            else:
+                by_corpus = self.run_group(kind, names, l=l, terms=terms,
+                                           k=k, predicate=predicate,
+                                           agg=agg)
             for i in idxs:
                 results[i] = by_corpus[queries[i].corpus]
+        if tracing:
+            end = self.clock()
+            for root in roots:
+                root.finish(end)
+                self.trace_log.append(root)
         return results
 
     # ------------------------------------------------------- engine core --
@@ -579,43 +780,93 @@ class AnalyticsServer:
         if len(chunk) > self.max_batch * max(shards, 1):
             raise ValueError(f"chunk of {len(chunk)} exceeds "
                              f"max_batch={self.max_batch} x {shards} shards")
-        t0 = time.perf_counter()
-        if len(chunk) == 1 and shards == 1:
-            name = chunk[0]
-            if name in self._stores:
-                # CompressedCorpus: the per-corpus path reuses the traversal
-                # weights (and search index) memoized on the store
-                self._count_fallback(kind, ga=self._corpora[name])
-                out = {name: self._run_single(kind, name, l=l, terms=terms,
-                                              k=k, predicate=predicate,
-                                              agg=agg)}
-                sig = SINGLE_SIGNATURE
+        tracing = self.registry.enabled
+        top_level = tracing and _trace.current() is None
+        t0 = self.clock()
+        hits0 = self.stats.batch_cache_hits
+        cm = (_trace.span("chunk", clock=self.clock,
+                          attrs={"kind": kind, "n_corpora": len(chunk),
+                                 "shards": shards})
+              if tracing else nullcontext())
+        with cm as chunk_span:
+            if len(chunk) == 1 and shards == 1:
+                name = chunk[0]
+                if name in self._stores:
+                    # CompressedCorpus: the per-corpus path reuses the
+                    # traversal weights (and search index) memoized on the
+                    # store
+                    sig = SINGLE_SIGNATURE
+                    with self._obs_stage("pack_build", tracing,
+                                         path="store_memo"):
+                        self._count_fallback(kind, ga=self._corpora[name])
+                    with self._obs_exec(kind, sig, tracing):
+                        out = {name: self._run_single(kind, name, l=l,
+                                                      terms=terms, k=k,
+                                                      predicate=predicate,
+                                                      agg=agg)}
+                else:
+                    # bare GrammarArrays: a cached size-1 pack keeps
+                    # compiled programs and host plans (sequence_count
+                    # windows, search statistics) across calls — repeat
+                    # single-corpus traffic costs one dispatch, not one
+                    # re-plan + re-compile
+                    with self._obs_stage("pack_build", tracing):
+                        gb = self._get_batch([name])
+                        self._count_fallback(kind, gb=gb)
+                    sig = gb.signature
+                    with self._obs_exec(kind, sig, tracing):
+                        vals = self._execute_batched(gb, kind, l, terms, k,
+                                                     predicate=predicate,
+                                                     agg=agg)
+                    out = {name: vals[0]}
+                self.stats.single_calls += 1
             else:
-                # bare GrammarArrays: a cached size-1 pack keeps compiled
-                # programs and host plans (sequence_count windows, search
-                # statistics) across calls — repeat single-corpus traffic
-                # costs one dispatch, not one re-plan + re-compile
-                gb = self._get_batch([name])
-                self._count_fallback(kind, gb=gb)
-                vals = self._execute_batched(gb, kind, l, terms, k,
-                                             predicate=predicate, agg=agg)
+                with self._obs_stage("pack_build", tracing):
+                    gb = self._get_batch(list(chunk), shards=shards)
+                    self._count_fallback(kind, gb=gb)
                 sig = gb.signature
-                out = {name: vals[0]}
-            self.stats.single_calls += 1
-        else:
-            gb = self._get_batch(list(chunk), shards=shards)
-            self._count_fallback(kind, gb=gb)
-            vals = self._execute_batched(gb, kind, l, terms, k,
-                                         predicate=predicate, agg=agg)
-            self.stats.batched_calls += 1
-            if shards > 1:
-                self.stats.sharded_calls += 1
-            self.stats.signatures[gb.signature] = \
-                self.stats.signatures.get(gb.signature, 0) + 1
-            sig = gb.signature
-            out = dict(zip(chunk, vals))
-        self.stats.observe_latency(kind, sig, time.perf_counter() - t0)
+                with self._obs_exec(kind, sig, tracing):
+                    vals = self._execute_batched(gb, kind, l, terms, k,
+                                                 predicate=predicate,
+                                                 agg=agg)
+                self.stats.batched_calls += 1
+                if shards > 1:
+                    self.stats.sharded_calls += 1
+                self.stats.signatures[gb.signature] = \
+                    self.stats.signatures.get(gb.signature, 0) + 1
+                out = dict(zip(chunk, vals))
+            if chunk_span is not None:
+                chunk_span.attrs["signature"] = _encode_label(sig)
+                chunk_span.attrs["cache_hit"] = \
+                    self.stats.batch_cache_hits > hits0
+        self.stats.observe_latency(kind, sig, self.clock() - t0)
+        if top_level:
+            # a chunk reached outside any query/flush span (direct
+            # execute_chunk / run_group callers): log its tree standalone
+            self.trace_log.append(chunk_span)
         return out
+
+    @contextmanager
+    def _obs_stage(self, stage: str, tracing: bool, **attrs):
+        """One stage span under the ambient chunk span + the per-stage
+        histogram; collapses to nothing when the registry is disabled."""
+        if not tracing:
+            yield None
+            return
+        with _trace.span(stage, clock=self.clock, attrs=attrs) as s:
+            yield s
+        self.stats.stage_seconds.labels(stage).observe(s.duration)
+
+    def _obs_exec(self, kind: str, sig: Tuple, tracing: bool):
+        """The device-execution stage.  Named ``compile`` on the first
+        execution of a (kind, signature) pair — that call pays jit
+        compilation, the same first-call the latency EWMA skips
+        (``observe_latency``) — and ``execute`` on every later one."""
+        if not tracing:
+            return nullcontext()
+        first = (kind, sig) not in self.stats.latency_obs
+        return self._obs_stage("compile" if first else "execute", True,
+                               first_call=first)
 
     # ---------------------------------------------------------- internals --
     def _get_batch(self, names: Sequence[str],

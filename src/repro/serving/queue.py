@@ -82,11 +82,12 @@ the submitting thread.
 from __future__ import annotations
 
 import threading
-import time
-from collections import deque
 from concurrent.futures import Future
 from dataclasses import dataclass, field
-from typing import Callable, Deque, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.obs import BoundedLog
+from repro.obs import tracing as _trace
 
 from .analytics_server import (DEFAULT_LATENCY_ESTIMATE, AnalyticsServer,
                                Query)
@@ -108,6 +109,10 @@ class _Pending:
     deadline: Optional[float]       # absolute, in the server's clock domain
     future: Future
     submitted_at: float
+    # root Span opened at submit time (registry enabled only).  Carried
+    # here rather than read back off query.trace: the same Query object
+    # may be submitted repeatedly, and each submission is its own tree.
+    span: Optional[_trace.Span] = None
 
 
 @dataclass
@@ -159,6 +164,11 @@ class FlushEvent:
     k: Optional[int] = None                  # search kinds only
     predicate: Optional[Tuple] = None        # filter_count only
     agg: Optional[str] = None                # agg_terms only
+    # the flush's Span (chunk/pack_build/execute children below it),
+    # present when the engine registry is enabled; compare=False so event
+    # equality stays about the flush facts
+    span: Optional[_trace.Span] = field(default=None, compare=False,
+                                        repr=False)
 
 
 class AsyncAnalyticsServer:
@@ -176,9 +186,12 @@ class AsyncAnalyticsServer:
     default_latency: batch-latency estimate used for a kind that has never
                    executed (seeds the ``deadline`` condition before the
                    EWMA has observations).
-    clock:         monotonic-time source; injectable for simulated-clock
-                   tests.  Deadlines passed to :meth:`submit` are absolute
-                   values in this clock's domain.
+    clock:         monotonic-time source; defaults to the engine's
+                   injectable ``server.clock`` so the whole serving stack
+                   shares one time domain, and is separately injectable
+                   for simulated-clock tests.  Deadlines passed to
+                   :meth:`submit` are absolute values in this clock's
+                   domain.
     poll_interval: sleep granularity of the background thread
                    (:meth:`start`); also the staleness bound on the
                    ``deadline``/``idle`` conditions when threaded.
@@ -203,7 +216,7 @@ class AsyncAnalyticsServer:
                  idle_timeout: float = 0.005,
                  max_wait: Optional[float] = None,
                  default_latency: float = DEFAULT_LATENCY_ESTIMATE,
-                 clock: Callable[[], float] = time.monotonic,
+                 clock: Optional[Callable[[], float]] = None,
                  poll_interval: float = 0.001,
                  target_shards: int = 1,
                  max_pending: Optional[int] = None):
@@ -225,7 +238,11 @@ class AsyncAnalyticsServer:
             raise ValueError("max_wait must be >= idle_timeout")
         self.default_latency = float(default_latency)
         self.poll_interval = float(poll_interval)
-        self._now = clock
+        # one clock domain for the whole stack by default: the engine's
+        # injectable clock (satellite of the same PR that added it there).
+        # An explicit clock= stays queue-local so simulated-clock tests
+        # keep driving the flush policy alone.
+        self._now = clock if clock is not None else server.clock
         self._pending: Dict[Tuple, _Group] = {}
         self._depth = 0                      # total pending queries, O(1)
         self._lock = threading.RLock()
@@ -233,8 +250,14 @@ class AsyncAnalyticsServer:
         # wakes submits blocked on the max_pending bound
         self._space = threading.Condition(self._lock)
         self._exec_lock = threading.Lock()   # one engine call at a time
-        # bounded observability ring (long-lived servers must not leak)
-        self.flush_log: Deque[FlushEvent] = deque(maxlen=4096)
+        # bounded observability ring (long-lived servers must not leak);
+        # evictions are counted and exposed as a gauge, never silent
+        self.flush_log: BoundedLog = BoundedLog(
+            4096, gauge=server.registry.gauge(
+                "repro_queue_flush_log_dropped_events",
+                "FlushEvents evicted from the bounded flush_log ring"))
+        self._depth_gauge = server.registry.gauge(
+            "repro_queue_depth", "pending queries in the async queue")
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
         self._wake = threading.Event()
@@ -289,9 +312,17 @@ class AsyncAnalyticsServer:
                 g = self._pending[key] = _Group(kind=kind, l=l, terms=terms,
                                                 k=k, predicate=predicate,
                                                 agg=agg)
-            g.add(_Pending(query, deadline, fut, now))
+            root = None
+            if self._engine.registry.enabled:
+                root = _trace.Span("query", now,
+                                   attrs={"corpus": query.corpus,
+                                          "kind": query.kind,
+                                          "path": "async"})
+                object.__setattr__(query, "trace", root)
+            g.add(_Pending(query, deadline, fut, now, span=root))
             self.stats.submitted += 1
             self._depth += 1
+            self._depth_gauge.set(float(self._depth))
             self.stats.max_queue_depth = max(self.stats.max_queue_depth,
                                              self._depth)
             if len(g.corpora_seen) >= self._engine.chunk_capacity(
@@ -361,16 +392,26 @@ class AsyncAnalyticsServer:
         submit blocked on the ``max_pending`` bound."""
         g = self._pending.pop(key)
         self._depth -= len(g.items)
+        self._depth_gauge.set(float(self._depth))
         self._space.notify_all()
         return g
 
     # ------------------------------------------------------------- flush --
     def _flush_group(self, g: _Group, reason: str, now: float) -> None:
+        tracing = self._engine.registry.enabled
         # claim each future (running state): callers may have cancel()ed a
         # pending one — set_result on it would raise InvalidStateError,
         # starving the rest of the group and killing the serve loop
         claimed = [p for p in g.items
                    if p.future.set_running_or_notify_cancel()]
+        if tracing:
+            # every claimed query waited submit -> flush, shed or not
+            wait_hist = self.stats.stage_seconds.labels("queue_wait")
+            for p in claimed:
+                wait_hist.observe(now - p.submitted_at)
+                if p.span is not None:
+                    p.span.children.append(_trace.Span(
+                        "queue_wait", p.submitted_at).finish(now))
         # shed the expired: a deadline already in the past cannot be met by
         # any execution, so the engine slot goes to queries that can still
         # use it.  Fail the futures before the engine call — their callers
@@ -381,35 +422,67 @@ class AsyncAnalyticsServer:
             p.future.set_exception(DeadlineExceeded(
                 f"deadline {p.deadline:.6f} passed before flush at "
                 f"{now:.6f} (queued {now - p.submitted_at:.6f}s)"))
+            if p.span is not None:
+                p.span.attrs["outcome"] = "shed"
+                self._engine.trace_log.append(p.span.finish(now))
         live = [p for p in claimed
                 if p.deadline is None or now <= p.deadline]
         names: List[str] = []
         for p in live:
             if p.query.corpus not in names:
                 names.append(p.query.corpus)
+        # ONE flush span shared by every query the flush answers — the
+        # chunk/pack_build/execute children hang off it via the ambient
+        # context inside run_group
+        fspan = _trace.Span("flush", now,
+                            attrs={"reason": reason, "kind": g.kind,
+                                   "n_queries": len(live),
+                                   "n_corpora": len(names),
+                                   "n_shed": len(shed)}) if tracing else None
+        err: Optional[Exception] = None
         if live:
             try:
                 # run_group -> execute_chunk refreshes every name against
                 # its store's current epoch before packing, so queries that
                 # queued before an append_files still serve fresh data
                 with self._exec_lock:
-                    by_corpus = self._engine.run_group(
-                        g.kind, names, l=g.l, terms=g.terms, k=g.k,
-                        predicate=g.predicate, agg=g.agg,
-                        target_shards=self.target_shards)
+                    if fspan is not None:
+                        with _trace.activate(fspan, self._now):
+                            by_corpus = self._engine.run_group(
+                                g.kind, names, l=g.l, terms=g.terms,
+                                k=g.k, predicate=g.predicate, agg=g.agg,
+                                target_shards=self.target_shards)
+                    else:
+                        by_corpus = self._engine.run_group(
+                            g.kind, names, l=g.l, terms=g.terms, k=g.k,
+                            predicate=g.predicate, agg=g.agg,
+                            target_shards=self.target_shards)
             except Exception as e:              # noqa: BLE001 — fanned out
+                err = e
                 for p in live:
                     p.future.set_exception(e)
             else:
                 for p in live:
                     p.future.set_result(by_corpus[p.query.corpus])
+        if fspan is not None:
+            if err is not None:
+                fspan.attrs["error"] = type(err).__name__
+            fspan.finish(self._now())
+            done = fspan.t1
+            for p in live:
+                if p.span is not None:
+                    p.span.children.append(fspan)
+                    p.span.attrs["outcome"] = ("error" if err is not None
+                                               else "ok")
+                    self._engine.trace_log.append(p.span.finish(done))
         with self._lock:                 # concurrent flushes race the stats
             self.stats.count_flush(reason)
             self.stats.shed += len(shed)
             self.flush_log.append(FlushEvent(
                 reason=reason, kind=g.kind, l=g.l, n_queries=len(live),
                 n_corpora=len(names), at=now, n_shed=len(shed),
-                terms=g.terms, k=g.k, predicate=g.predicate, agg=g.agg))
+                terms=g.terms, k=g.k, predicate=g.predicate, agg=g.agg,
+                span=fspan))
 
     # ---------------------------------------------------------- threaded --
     def start(self) -> "AsyncAnalyticsServer":
